@@ -1,0 +1,39 @@
+"""Appendix A — low contention (W=32): no evictions; latency is driven by
+batch size / prefill speed; Sarathi_nohy degrades with large I."""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, print_table, save_json
+from repro.core.simulator import fresh_requests, run_sim
+
+
+def run() -> dict:
+    cm = cost_model()
+    W, M = 32, 100_000
+    out = {}
+    rows = []
+    for O in (32, 1024):
+        for I in (1, 32, 1024):
+            for name in ("vllm", "sarathi", "sarathi_nohy"):
+                reqs = fresh_requests([(I, O, 0.0)] * W)
+                s = run_sim(name, reqs, cm, M=M).summary()
+                out[f"{name}_I{I}_O{O}"] = s
+                rows.append([name, I, O, f"{s['latency']:.2f}",
+                             f"{s['mean_tpot']*1e3:.2f}",
+                             int(s["preemptions"]),
+                             f"{s['mean_batch_size']:.1f}"])
+    print_table("App. A — W=32 (no contention)",
+                ["scheduler", "I", "O", "latency(s)", "TPOT(ms)",
+                 "preempt", "batch size"], rows)
+    assert all(s["preemptions"] == 0 for s in out.values())
+    # vLLM fastest or tied; sarathi_nohy hurts for large I (batch collapse)
+    for O in (32, 1024):
+        assert (out[f"vllm_I32_O{O}"]["latency"]
+                <= out[f"sarathi_I32_O{O}"]["latency"] * 1.02)
+    assert (out["sarathi_nohy_I1024_O32"]["latency"]
+            > out["vllm_I1024_O32"]["latency"])
+    save_json("appa_low_contention", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

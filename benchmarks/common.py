@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: calibrated cost models, table printing,
+result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.cost_model import (TheoreticalCostModel,  # noqa: E402
+                                   get_hardware)
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+#: de-rating calibrated against the paper's measured gaps (Fig. 5-6):
+#: matmuls reach ~60% of peak FLOPs, HBM streams ~75%, attention's
+#: interleaved (non-overlapped) transfers reach only ~25% of bandwidth.
+CALIB = dict(flops_eff=0.6, bw_eff=0.75, attn_bw_eff=0.25)
+
+
+def cost_model(arch: str = "llama2-7b", hw: str = "a100",
+               **overrides) -> TheoreticalCostModel:
+    kw = dict(CALIB)
+    kw.update(overrides)
+    return TheoreticalCostModel(get_config(arch), get_hardware(hw), **kw)
+
+
+def print_table(title: str, headers: Sequence[str],
+                rows: Iterable[Sequence], fmt: Optional[str] = None) -> None:
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), 10) for h in headers]
+    rows = [["%.4g" % c if isinstance(c, float) else str(c) for c in r]
+            for r in rows]
+    for r in rows:
+        for i, c in enumerate(r):
+            widths[i] = max(widths[i], len(c))
+    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+
+
+def save_json(name: str, payload: Any) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path

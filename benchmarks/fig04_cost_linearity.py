@@ -1,0 +1,64 @@
+"""Fig. 4 — linearity of per-operator times in the Table-3 variables.
+
+Single-variable linear regressions of operator times over their
+representative variable (non-attention: c; decode-attention: m;
+prefill-attention: c(c+m)); the paper reports R^2 > 0.96 on
+A100 and H100 measurements.  Labels here come from the de-rated
+theoretical model + measurement noise (profile_synthetic) — the exact
+pipeline a GPU deployment runs with real timings.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cost_model, print_table, save_json
+from repro.configs import get_config
+from repro.core.cost_model import (BatchSpec, get_hardware,
+                                   group_labels_from_theory)
+
+
+def r2(x: np.ndarray, y: np.ndarray) -> float:
+    A = np.stack([x, np.ones_like(x)], 1)
+    w, *_ = np.linalg.lstsq(A, y, rcond=None)
+    resid = y - A @ w
+    return 1.0 - resid.var() / y.var()
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    rows = []
+    out = {}
+    for hw in ("a100", "h100", "tpu_v5e"):
+        cm = cost_model("llama2-7b", hw)
+        # non-attention vs c
+        cs = np.unique(rng.integers(1, 4096, 80))
+        y = np.array([group_labels_from_theory(
+            cm, BatchSpec(prefills=[(int(c), 0)]))["nonattn"]
+            * rng.lognormal(0, 0.03) for c in cs])
+        r2_non = r2(cs.astype(float), y)
+        # decode attention vs m (B=16)
+        ms = np.unique(rng.integers(1, 8192, 80))
+        y = np.array([group_labels_from_theory(
+            cm, BatchSpec(decodes=[(1, int(m))] * 16))["attn_decode"]
+            * rng.lognormal(0, 0.03) for m in ms])
+        r2_dec = r2(ms.astype(float), y)
+        # prefill attention vs c(c+m)
+        cs = np.unique(rng.integers(16, 4096, 80))
+        x = cs.astype(float) ** 2
+        y = np.array([group_labels_from_theory(
+            cm, BatchSpec(prefills=[(int(c), 0)]))["attn_prefill"]
+            * rng.lognormal(0, 0.03) for c in cs])
+        r2_pre = r2(x, y)
+        rows.append([hw, r2_non, r2_dec, r2_pre])
+        out[hw] = dict(nonattn=r2_non, attn_decode=r2_dec,
+                       attn_prefill=r2_pre)
+    print_table("Fig 4 — R^2 of single-variable linear fits (paper: >0.96)",
+                ["hw", "nonattn~c", "decode_attn~m", "prefill_attn~c^2"],
+                rows)
+    assert all(v > 0.96 for d in out.values() for v in d.values())
+    save_json("fig04_cost_linearity", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Figs. 5-6 — operator breakdown + roofline placement (§5.2).
+
+For prefill/decode batches over (c, m, B): operator time shares, each
+attention point's intensity (FLOPs/RW) against the hardware turning
+point, and the §5.2 remark checks (attention memory-bound even for
+prefill; whole decode batches can be compute-bound).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cost_model, print_table, save_json
+from repro.configs import get_config
+from repro.core.cost_model import BatchSpec, attention_flops_rw, get_hardware
+from repro.core.slo import balanced_intensity
+
+CFG = get_config("llama2-7b")
+
+
+def run() -> dict:
+    out = {"points": []}
+    for hw_name in ("h100", "tpu_v5e"):
+        hw = get_hardware(hw_name)
+        turning = hw.flops / hw.hbm_bw
+        cm = cost_model("llama2-7b", hw_name)
+        rows = []
+        for phase, c, m, B in [
+            ("prefill", 128, 0, 8), ("prefill", 1024, 0, 8),
+            ("prefill", 4096, 0, 8),
+            ("decode", 1, 512, 32), ("decode", 1, 4096, 32),
+            ("decode", 1, 4096, 256),
+        ]:
+            fl, rw = attention_flops_rw(c, m, CFG, 1, 2)
+            fl, rw = fl * B, rw * B
+            intensity = fl / rw
+            spec = (BatchSpec(prefills=[(c, m)] * B) if phase == "prefill"
+                    else BatchSpec(decodes=[(c, m)] * B))
+            times = cm.op_times(spec)
+            total = sum(times.values())
+            attn_t = times["attn_prefill"] + times["attn_decode"]
+            matmul_t = times["qkv_proj"] + times["o_proj"] + times["mlp"]
+            terms = cm.batch_terms(spec)
+            batch_bound = ("compute" if terms["compute_s"] > terms["memory_s"]
+                           else "memory")
+            rows.append([phase, c, m, B, f"{intensity:.1f}",
+                         f"{turning:.0f}",
+                         "mem" if intensity < turning else "comp",
+                         f"{attn_t/total:.0%}", f"{matmul_t/total:.0%}",
+                         batch_bound])
+            out["points"].append(dict(hw=hw_name, phase=phase, c=c, m=m,
+                                      B=B, intensity=intensity,
+                                      turning=turning,
+                                      batch_bound=batch_bound))
+        print_table(
+            f"Fig 5/6 — roofline placement on {hw_name} "
+            f"(turning point {turning:.0f} FLOPs/B)",
+            ["phase", "c", "m", "B", "attn FLOPs/B", "turning",
+             "attn bound", "attn t%", "matmul t%", "batch bound"], rows)
+
+    # §5.2 remark checks
+    h100 = get_hardware("h100")
+    for c in (128, 1024, 4096):
+        fl, rw = attention_flops_rw(c, 0, CFG, 1, 2)
+        assert fl / rw < h100.flops / h100.hbm_bw  # attention memory-bound
+    # intensity convergence: prefill -> H, decode -> 2 (Llama-2 MHA)
+    out["intensity_prefill_limit"] = balanced_intensity(128, 32, 32, 4096)
+    out["intensity_decode_limit"] = balanced_intensity(128, 32, 32, 1)
+    print(f"\nintensity limits: prefill={out['intensity_prefill_limit']:.0f}"
+          f" (paper: 128), decode={out['intensity_decode_limit']:.2f}"
+          f" (paper: ~2)")
+    save_json("fig06_roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

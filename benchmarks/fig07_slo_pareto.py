@@ -1,0 +1,40 @@
+"""Fig. 7 — (c, m) pareto curves that pin the hybrid-batch time at the
+TPOT threshold (§5.3, top-down SLO attainment)."""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, print_table, save_json
+from repro.core.slo import pareto_curve
+
+
+def run() -> dict:
+    out = {}
+    rows = []
+    for hw in ("a100", "h100"):
+        cm = cost_model("llama2-7b", hw)
+        for n_pre in (8, 32, 128):
+            for n_dec in (8, 32, 128):
+                pts = pareto_curve(cm, num_prefill=n_pre, num_decode=n_dec,
+                                   threshold=1.0,
+                                   cs=(1, 16, 64, 256, 1024, 4096))
+                key = f"{hw}_p{n_pre}_d{n_dec}"
+                out[key] = [(p.c, p.m) for p in pts]
+                for p in pts:
+                    rows.append([hw, n_pre, n_dec, p.c, p.m,
+                                 f"{p.batch_time:.3f}"])
+    print_table("Fig 7 — (c, m) with hybrid batch time == 1 s",
+                ["hw", "#prefill", "#decode", "c", "m", "time(s)"],
+                rows[:24])
+    print(f"... ({len(rows)} rows total; H100 admits larger c/m intercepts)")
+    # H100 dominates A100 at equal config (larger feasible m)
+    for n_pre, n_dec in ((8, 8), (32, 32)):
+        a = dict(out[f"a100_p{n_pre}_d{n_dec}"])
+        h = dict(out[f"h100_p{n_pre}_d{n_dec}"])
+        for c in a:
+            if c in h:
+                assert h[c] >= a[c]
+    save_json("fig07_slo_pareto", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

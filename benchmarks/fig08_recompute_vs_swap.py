@@ -1,0 +1,41 @@
+"""Fig. 8 — KV (re)computation vs swap-in times over #KVs (§5.4).
+
+'Recompute' here is the activation-cached K/V-projection rebuild the
+paper measures (per-KV cost falls with N as the weight-load bias
+amortizes); the full-refill prefill cost (what a preempted request pays)
+is reported alongside for contrast.
+"""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, print_table, save_json
+
+
+def run() -> dict:
+    out = {}
+    for hw in ("a100", "h100"):
+        cm = cost_model("llama2-7b", hw)
+        rows = []
+        turning = None
+        for n in (1, 8, 32, 100, 512, 2048, 8192, 32768, 100_000):
+            t_proj = cm.kv_projection_time(n)
+            t_swap = cm.swap_time(n)
+            t_full = cm.recompute_time(min(n, 100_000))
+            winner = "swap" if t_swap < t_proj else "recompute"
+            if turning is None and t_proj <= t_swap:
+                turning = n
+            rows.append([n, f"{t_proj*1e3:.3f}", f"{t_swap*1e3:.3f}",
+                         f"{t_full*1e3:.3f}", winner,
+                         f"{t_proj/n*1e6:.2f}us"])
+        print_table(
+            f"Fig 8 — recompute vs swap on {hw} "
+            f"(turning point ~{turning} KVs; paper: small vs M=100K)",
+            ["#KVs", "kv-proj recompute (ms)", "swap-in (ms)",
+             "full refill (ms)", "winner", "per-KV"], rows)
+        out[hw] = {"turning_point": turning}
+        assert turning is not None and turning < 5_000
+    save_json("fig08_recompute_vs_swap", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

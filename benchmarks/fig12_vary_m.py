@@ -1,0 +1,50 @@
+"""Fig. 12 (+ App. B Fig. 18) — is increasing M a silver bullet? (§5.7)
+
+O=32, W=1024, M from 100 to 1M: preemption helps ~2x under tight memory,
+hurts once memory is ample; even M=1M leaves the cache underutilized.
+"""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, print_table, save_json
+from repro.core.simulator import fresh_requests, run_sim
+
+
+def run(W: int = 1024) -> dict:
+    cm = cost_model()
+    out = {}
+    rows = []
+    for I in (1, 8):
+        for M in (100, 1_000, 10_000, 100_000, 1_000_000):
+            for name in ("vllm", "vllm_pf", "sarathi", "sarathi_pf"):
+                reqs = fresh_requests([(I, 32, 0.0)] * W)
+                s = run_sim(name, reqs, cm, M=M).summary()
+                out[f"{name}_I{I}_M{M}"] = s
+            v, vp = out[f"vllm_I{I}_M{M}"], out[f"vllm_pf_I{I}_M{M}"]
+            sa, sp = out[f"sarathi_I{I}_M{M}"], out[f"sarathi_pf_I{I}_M{M}"]
+            rows.append([I, M, f"{v['latency']:.2f}", f"{vp['latency']:.2f}",
+                         f"{vp['latency']/v['latency']:.2f}x",
+                         f"{sa['latency']:.2f}", f"{sp['latency']:.2f}",
+                         f"{sp['latency']/sa['latency']:.2f}x",
+                         int(v["preemptions"]),
+                         f"{sa['mean_kv_used']/M:.0%}"])
+    print_table("Fig 12 — O=32 W=1024, varying M (ratio >1: preemption "
+                "helps; <1: hurts)",
+                ["I", "M", "vllm", "vllm_pf", "PF/vllm", "sarathi",
+                 "sarathi_pf", "PF/sarathi", "vllm preempt",
+                 "sarathi KV use"], rows)
+    # paper: ~2x win at M=100; no win at M>=10K; low utilization at 1M
+    for I in (1, 8):
+        small = (out[f"sarathi_pf_I{I}_M100"]["latency"]
+                 / out[f"sarathi_I{I}_M100"]["latency"])
+        large = (out[f"vllm_pf_I{I}_M10000"]["latency"]
+                 / out[f"vllm_I{I}_M10000"]["latency"])
+        assert small > 1.4, small
+        assert large <= 1.0 + 1e-9, large
+        assert (out[f"sarathi_I{I}_M1000000"]["mean_kv_used"]
+                / 1_000_000 < 0.2)
+    save_json("fig12_vary_m", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

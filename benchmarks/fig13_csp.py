@@ -1,0 +1,45 @@
+"""Fig. 13 — CSP-optimal schedules: preemption is optimal for short
+requests, harmful for long ones (§7.1)."""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, print_table, save_json
+from repro.core.csp import solve_optimal_schedule
+from repro.core.simulator import fresh_requests, run_sim
+
+
+def run() -> dict:
+    cm = cost_model()
+    O = W = 4
+    out = {}
+    rows = []
+    for I in (1, 4, 16, 32, 64, 256, 1024):
+        M = max(2 * I, I + O - 1)
+        res = solve_optimal_schedule([(I, O)] * W, M=M, C=4096,
+                                     cost_model=cm)
+        vllm = run_sim("vllm", fresh_requests([(I, O, 0.0)] * W), cm,
+                       M=M).latency
+        pf = run_sim("vllm_pf", fresh_requests([(I, O, 0.0)] * W), cm,
+                     M=M).latency
+        gain_vs_pf = (pf - res.optimal_time) / pf
+        out[f"I{I}"] = dict(optimal=res.optimal_time,
+                            preemptions=res.num_preemptions,
+                            batches=res.num_batches, vllm=vllm, pf=pf,
+                            states=res.states_expanded)
+        rows.append([I, M, f"{res.optimal_time*1e3:.2f}",
+                     res.num_preemptions, res.num_batches,
+                     f"{vllm*1e3:.2f}", f"{pf*1e3:.2f}",
+                     f"{gain_vs_pf:+.0%}"])
+    print_table("Fig 13 — O=W=4, M=max(2I, I+O-1): optimal schedules",
+                ["I", "M", "CSP opt (ms)", "preempt", "batches",
+                 "vllm (ms)", "vllm_pf (ms)", "opt vs PF"], rows)
+    # paper: CSP preempts for small I, avoids preemption for large I
+    assert out["I1"]["preemptions"] > 0
+    assert out["I4"]["preemptions"] > 0
+    assert out["I1024"]["preemptions"] == 0
+    assert out["I1024"]["optimal"] == out["I1024"]["pf"]
+    save_json("fig13_csp", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""§6 — the five-minute rule for LLM inference: break-even residency
+intervals per request length (paper: [0.33 s, 130 s] on H100, M=100K)."""
+from __future__ import annotations
+
+from benchmarks.common import cost_model, print_table, save_json
+from repro.core.five_minute_rule import break_even_table
+
+
+def run() -> dict:
+    out = {}
+    for hw in ("h100", "a100", "tpu_v5e"):
+        cm = cost_model("llama2-7b", hw)
+        table = break_even_table(cm, M=100_000,
+                                 ns=(1, 8, 64, 512, 4095, 32768))
+        rows = [[b.n_kvs, f"{b.per_kv*1e6:.2f}us", f"{b.interval:.2f}",
+                 f"{b.interval_swap:.2f}"] for b in table]
+        print_table(f"§6 five-minute rule on {hw} (M=100K)",
+                    ["#KVs (N)", "t_recom/N", "break-even (s)",
+                     "swap-based (s)"], rows)
+        out[hw] = {b.n_kvs: b.interval for b in table}
+        ivals = [b.interval for b in table]
+        # non-increasing overall; strictly falling while the weight-load
+        # bias amortizes (it saturates at the per-KV floor — paper: 3.3us)
+        assert all(a >= b - 1e-9 for a, b in zip(ivals, ivals[1:]))
+        assert ivals[0] > ivals[1] > ivals[2]
+    # paper's H100 range: [0.33, 130] s between N=4095 and N=1
+    h = out["h100"]
+    assert 0.02 < h[4095] < 15.0
+    assert 5.0 < h[1] < 2000.0
+    save_json("five_minute_rule", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

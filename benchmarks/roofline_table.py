@@ -1,0 +1,84 @@
+"""§Roofline — the per-(arch x shape) roofline table from the dry-run
+artifacts (reads experiments/roofline/*.json written by
+``python -m repro.launch.dryrun --all --unroll --out experiments/roofline``;
+falls back to experiments/dryrun for cells not yet re-run unrolled).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_table, save_json
+
+DIRS = ("experiments/roofline", "experiments/dryrun")
+
+
+def _advice(rep: dict) -> str:
+    dom = rep["roofline"]["dominant"]
+    shape = rep["shape"]
+    if dom == "collective_s":
+        return "cut FSDP all-gathers (replicate small params / overlap)"
+    if dom == "memory_s":
+        if "decode" in shape or "long" in shape:
+            return "seq-shard KV wider / quantize KV to int8"
+        return "fuse residual/norm streams; bf16 end-to-end"
+    if rep["roofline"]["useful_flops_fraction"] < 0.5:
+        return "remove redundant compute (remat policy / MoE dispatch)"
+    return "compute-bound: already near the right wall"
+
+
+def load_cells() -> dict:
+    cells = {}
+    for d in DIRS:
+        for path in sorted(glob.glob(os.path.join(d, "*_sp.json"))):
+            with open(path) as f:
+                rep = json.load(f)
+            key = (rep["arch"], rep["shape"])
+            if key not in cells or rep.get("unroll"):
+                if key in cells and cells[key].get("unroll") \
+                        and not rep.get("unroll"):
+                    continue
+                cells[key] = rep
+    return cells
+
+
+def run() -> dict:
+    cells = load_cells()
+    if not cells:
+        print("roofline_table: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all --unroll --out "
+              "experiments/roofline` first")
+        return {}
+    rows = []
+    out = {}
+    for (arch, shape), rep in sorted(cells.items()):
+        r = rep["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        frac = max(r["compute_s"], r["memory_s"], r["collective_s"]) / total \
+            if total else 0.0
+        rows.append([arch, shape,
+                     f"{r['compute_s']*1e3:.2f}",
+                     f"{r['memory_s']*1e3:.2f}",
+                     f"{r['collective_s']*1e3:.2f}",
+                     r["dominant"].replace("_s", ""),
+                     f"{r['useful_flops_fraction']:.1%}",
+                     "Y" if rep.get("fits_hbm") else "N",
+                     "Y" if rep.get("unroll") else "n",
+                     _advice(rep)])
+        out[f"{arch}|{shape}"] = {
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful": r["useful_flops_fraction"],
+            "model_flops": r["model_flops"],
+        }
+    print_table("§Roofline — per (arch x shape), 16x16 mesh, TPU v5e "
+                "(C/M/X in ms per step)",
+                ["arch", "shape", "C(ms)", "M(ms)", "X(ms)", "dominant",
+                 "useful", "fits", "unr", "next lever"], rows)
+    save_json("roofline_table", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""``python -m benchmarks.run`` — every paper table/figure, in order.
+
+Each module prints its table, asserts the paper's qualitative claims,
+and persists JSON under experiments/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+from benchmarks import (appa_low_contention, appb_engine_validation,  # noqa: E402
+                        appc_ranking, fig04_cost_linearity, fig06_roofline,
+                        fig07_slo_pareto, fig08_recompute_vs_swap,
+                        fig09_schedulers, fig11_preemption_free,
+                        fig12_vary_m, fig13_csp, fig14_srf,
+                        five_minute_rule, roofline_table)
+
+MODULES = [
+    ("Fig 4  cost-model linearity", fig04_cost_linearity),
+    ("Fig 5/6 roofline placement", fig06_roofline),
+    ("Fig 7  SLO pareto", fig07_slo_pareto),
+    ("Fig 8  recompute vs swap", fig08_recompute_vs_swap),
+    ("Fig 9  scheduler comparison (W=1024)", fig09_schedulers),
+    ("App A  low contention (W=32)", appa_low_contention),
+    ("Fig 11 preemption-free", fig11_preemption_free),
+    ("Fig 12 varying M", fig12_vary_m),
+    ("Fig 13 CSP optimal scheduling", fig13_csp),
+    ("Fig 14 SRF vs NRF", fig14_srf),
+    ("App B  engine-vs-sim validation", appb_engine_validation),
+    ("App C  heterogeneous ranking", appc_ranking),
+    ("$6     five-minute rule", five_minute_rule),
+    ("$Roofline table (dry-run artifacts)", roofline_table),
+]
+
+
+def main() -> int:
+    t0 = time.time()
+    failures = []
+    for name, mod in MODULES:
+        print(f"\n{'='*72}\n>> {name}\n{'='*72}")
+        t = time.time()
+        try:
+            mod.run()
+            print(f"[ok] {name} ({time.time()-t:.1f}s)")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[FAIL] {name}")
+    print(f"\n{'='*72}")
+    print(f"benchmarks: {len(MODULES)-len(failures)}/{len(MODULES)} passed "
+          f"in {time.time()-t0:.0f}s")
+    if failures:
+        print("failed:", ", ".join(failures))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""End-to-end serving driver (the paper is an inference paper, so this is
+the required E2E example): a REAL model served with continuous batching,
+chunked prefill, and the paper's cache-replacement policies — then the
+same workload under NRF vs SRF, verifying byte-identical outputs and
+comparing cost-model latencies.
+
+Run:  PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (Request, TheoreticalCostModel, get_hardware,
+                        make_scheduler)
+from repro.models import model as M
+from repro.serving import Engine, EngineConfig
+
+ARCH = "tinyllama-1.1b"
+N_REQ = 10
+M_KV = 120          # tight cache -> forces preemptions
+CACHE_LEN = 64
+
+cfg = dataclasses.replace(get_config(ARCH).reduced(), dtype="float32")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+cm = TheoreticalCostModel(cfg, get_hardware("tpu_v5e"))
+
+
+def workload(seed=0):
+    rs = np.random.RandomState(seed)
+    reqs = []
+    for i in range(N_REQ):
+        I, O = int(rs.randint(8, 28)), int(rs.randint(4, 12))
+        prompt = rs.randint(0, cfg.vocab_size, size=I).tolist()
+        reqs.append(Request(rid=i, input_len=I, output_len=O,
+                            arrival=float(i) * 1e-5, prompt=prompt))
+    return reqs
+
+
+outputs = {}
+for repl in ("nrf", "srf"):
+    sched = make_scheduler("vllm", M_KV, S=CACHE_LEN * 2, replacement=repl)
+    eng = Engine(cfg, params, sched,
+                 EngineConfig(nslots=4, cache_len=CACHE_LEN, chunk=16),
+                 cost_model=cm)
+    res = eng.run(workload())
+    s = res.metrics.summary()
+    outputs[repl] = res.outputs
+    print(f"[{repl.upper()}] latency={s['latency']*1e3:8.3f}ms  "
+          f"preemptions={int(s['preemptions']):3d}  "
+          f"batches={int(s['batches']):3d}  "
+          f"mean TTFT={s['mean_ttft']*1e3:7.3f}ms  wall={res.wall_time:.1f}s")
+
+same = all(outputs["nrf"][i] == outputs["srf"][i] for i in range(N_REQ))
+print(f"\noutputs identical under NRF and SRF: {same} "
+      f"(replacement policy changes WHEN work happens, never WHAT "
+      f"is computed)")
+print("sample generation rid=0:", outputs["srf"][0])
+assert same

@@ -1,0 +1,19 @@
+"""Render EXPERIMENTS.md's roofline table from experiments/roofline JSONs."""
+import glob, json, sys
+sys.path.insert(0, ".")
+from benchmarks.roofline_table import _advice
+
+rows = []
+for path in sorted(glob.glob("experiments/roofline/*_sp.json")):
+    r = json.load(open(path))
+    rf = r["roofline"]
+    raw = rf.get("memory_s_cpu_raw", rf["memory_s"])
+    rows.append((r["arch"], r["shape"], rf["compute_s"], rf["memory_s"],
+                 raw, rf["collective_s"], rf["dominant"],
+                 rf["useful_flops_fraction"], r.get("microbatches", 1),
+                 r.get("fits_hbm"), _advice(r)))
+print("| arch | shape | C (ms) | M (ms) | X (ms) | dominant | useful | mb | what moves the dominant term |")
+print("|---|---|---|---|---|---|---|---|---|")
+for a, s, c, m, raw, x, d, u, mb, fit, adv in rows:
+    print(f"| {a} | {s} | {c*1e3:.2f} | {m*1e3:.2f} | "
+          f"{x*1e3:.2f} | {d.replace('_s','')} | {u:.1%} | {mb} | {adv} |")

@@ -1,0 +1,9 @@
+"""Checkpointing: sharded store + async manager with auto-resume."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    list_steps,
+    restore,
+    retain,
+    save,
+    verify,
+)

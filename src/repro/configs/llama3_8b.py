@@ -1,0 +1,16 @@
+"""Llama-3-8B — the paper's §8 deployment model (S=128K, Figure 14)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=5e5,
+    max_context=131072,
+))

@@ -1,0 +1,31 @@
+"""Paper core: scheduling, cache management, cost models, CSP, 5-min rule."""
+from repro.core.cost_model import (  # noqa: F401
+    HARDWARE,
+    BatchSpec,
+    CostModel,
+    HardwareConfig,
+    LinearCostModel,
+    TheoreticalCostModel,
+    calibrated_cost_model,
+    fit_linear_model,
+    get_hardware,
+    profile_synthetic,
+)
+from repro.core.csp import (  # noqa: F401
+    CSPResult,
+    exists_schedule_below,
+    solve_optimal_schedule,
+)
+from repro.core.five_minute_rule import break_even_interval, break_even_table  # noqa: F401
+from repro.core.histogram import OutputLengthHistogram  # noqa: F401
+from repro.core.kvcache import OutOfPagesError, PagedAllocator  # noqa: F401
+from repro.core.policies import group_requests, select_victim  # noqa: F401
+from repro.core.request import Phase, Request  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    Batch,
+    Scheduler,
+    SchedulerConfig,
+    make_scheduler,
+)
+from repro.core.simulator import SimResult, fresh_requests, run_sim, simulate  # noqa: F401
+from repro.core.slo import pareto_curve  # noqa: F401

@@ -1,0 +1,52 @@
+"""Gray & Putzolu's five-minute rule applied to KV caches (paper §6).
+
+Break-even interval for keeping the N KVs of a completed request resident
+in the KV cache rather than recomputing them on the next access:
+
+    interval(N) = t_recom(N) / N * M            (Eq. 5)
+
+where t_recom(N) is the time to recompute N KVs (one prefill of c = N) and
+M the KV-cache capacity in tokens.  The price terms cancel because both
+sides are measured in GPU-seconds.  Because t_recom(N)/N *falls* with N
+(the fixed weight-load cost amortizes), longer requests have SHORTER
+break-even intervals: evict long requests' KVs sooner.
+
+``swap`` variant uses the host-link transfer time instead of recompute
+(§5.4 / §6 remark: the interval spectrum broadens with alternatives).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+from repro.core.cost_model import TheoreticalCostModel
+
+
+@dataclass
+class BreakEven:
+    n_kvs: int
+    t_recom: float        # seconds to recompute N KVs
+    per_kv: float         # t_recom / N
+    interval: float       # break-even residency (seconds)
+    interval_swap: float  # same, if regeneration is a host swap-in
+
+
+def break_even_interval(model: TheoreticalCostModel, n_kvs: int,
+                        M: int, *, mode: str = "kv_projection") -> BreakEven:
+    """mode='kv_projection' (the paper's Fig. 8 measurement: layer inputs
+    cached, only K/V projections replayed) or 'full' (refill-style full
+    forward — the §3 preemption cost)."""
+    if mode == "kv_projection":
+        t = model.kv_projection_time(n_kvs)
+    else:
+        t = model.recompute_time(n_kvs)
+    ts = model.swap_time(n_kvs)
+    return BreakEven(n_kvs=n_kvs, t_recom=t, per_kv=t / n_kvs,
+                     interval=t / n_kvs * M,
+                     interval_swap=ts / n_kvs * M)
+
+
+def break_even_table(model: TheoreticalCostModel, M: int,
+                     ns: Sequence[int] = (1, 8, 64, 512, 4096, 32768),
+                     *, mode: str = "kv_projection") -> List[BreakEven]:
+    return [break_even_interval(model, n, M, mode=mode) for n in ns]

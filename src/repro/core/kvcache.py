@@ -1,0 +1,92 @@
+"""Paged KV-cache block allocator (control plane).
+
+vLLM-style paging adapted to the TPU data plane: the *allocator* is pure
+Python bookkeeping (free list + per-request block tables); the *pools*
+are JAX arrays ``(num_pages, page_size, Hkv, D)`` per layer owned by the
+serving engine.  The allocator enforces exactly the ``sum(m) <= M``
+constraint the scheduler reasons about, at page granularity.
+
+Replacement policy is NOT here — preemption victims are chosen by
+``repro.core.policies``; the engine then calls ``free(rid)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+@dataclass
+class BlockTable:
+    pages: List[int] = field(default_factory=list)
+    num_tokens: int = 0  # valid tokens across those pages
+
+
+class PagedAllocator:
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages > 0 and page_size > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._tables: Dict[int, BlockTable] = {}
+
+    # ------------------------------------------------------------------ #
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def tokens_capacity(self) -> int:
+        return self.num_pages * self.page_size
+
+    def free_tokens(self) -> int:
+        return self.free_pages * self.page_size
+
+    def table(self, rid: int) -> BlockTable:
+        return self._tables[rid]
+
+    def has(self, rid: int) -> bool:
+        return rid in self._tables
+
+    def pages_needed(self, rid: int, new_tokens: int) -> int:
+        cur = self._tables.get(rid)
+        have = len(cur.pages) * self.page_size - cur.num_tokens if cur else 0
+        need_tokens = max(0, new_tokens - have)
+        return (need_tokens + self.page_size - 1) // self.page_size
+
+    # ------------------------------------------------------------------ #
+    def allocate(self, rid: int, new_tokens: int) -> List[int]:
+        """Extend rid's table by new_tokens; returns newly granted pages."""
+        need = self.pages_needed(rid, new_tokens)
+        if need > len(self._free):
+            raise OutOfPagesError(
+                f"rid={rid} needs {need} pages, {len(self._free)} free")
+        tbl = self._tables.setdefault(rid, BlockTable())
+        granted = [self._free.pop() for _ in range(need)]
+        tbl.pages.extend(granted)
+        tbl.num_tokens += new_tokens
+        return granted
+
+    def free(self, rid: int) -> int:
+        """Release all pages of rid (preemption/completion). Returns count."""
+        tbl = self._tables.pop(rid, None)
+        if tbl is None:
+            return 0
+        self._free.extend(reversed(tbl.pages))
+        return len(tbl.pages)
+
+    # ------------------------------------------------------------------ #
+    def check_invariants(self) -> None:
+        held = [p for t in self._tables.values() for p in t.pages]
+        all_pages = held + self._free
+        assert len(all_pages) == self.num_pages, "page leak"
+        assert len(set(all_pages)) == self.num_pages, "double allocation"
+        for rid, t in self._tables.items():
+            cap = len(t.pages) * self.page_size
+            assert 0 <= t.num_tokens <= cap, (rid, t.num_tokens, cap)

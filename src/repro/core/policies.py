@@ -1,0 +1,70 @@
+"""Cache-insertion priorities and cache-replacement (preemption) policies.
+
+Insertion (GROUPREQUESTS, Table 2):
+  * ``prefill_first`` — vLLM: {R_w, R_r}
+  * ``decode_first``  — Sarathi/ORCA: {R_r^d, R_r^p, R_w}
+Within each group requests are ordered by a ranking key:
+  * ``arrival`` (FCFS, default), ``input`` (Rank_I), ``output`` (Rank_O —
+    hypothetical: reads r.output_len).
+
+Replacement (victim selection on memory pressure):
+  * ``nrf`` — newest request first (vLLM/Sarathi default)
+  * ``srf`` — shortest request first: preempt the request with the fewest
+    cached tokens m (the paper's contribution, §8)
+  * ``lrf`` — longest request first (ablation / anti-policy)
+  * ``pf``  — preemption-free: never select a victim (callers must reserve
+    peak memory up front)
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence
+
+from repro.core.request import Phase, Request
+
+# --------------------------------------------------------------------- #
+# insertion
+# --------------------------------------------------------------------- #
+
+
+def ranking_key(ranking: str):
+    if ranking == "arrival":
+        return lambda r: (r.arrival, r.rid)
+    if ranking == "input":
+        return lambda r: (r.input_len, r.arrival, r.rid)
+    if ranking == "output":  # hypothetical
+        return lambda r: (r.output_len, r.arrival, r.rid)
+    raise ValueError(f"unknown ranking {ranking!r}")
+
+
+def group_requests(waiting: Sequence[Request], running: Sequence[Request], *,
+                   priority: str, ranking: str = "arrival") -> List[Request]:
+    """Return all candidates in global priority order (paper step 1)."""
+    key = ranking_key(ranking)
+    w = sorted(waiting, key=key)
+    if priority == "prefill_first":
+        r = sorted(running, key=key)
+        return w + r
+    if priority == "decode_first":
+        rd = sorted((r for r in running if r.phase == Phase.DECODE), key=key)
+        rp = sorted((r for r in running if r.phase == Phase.PREFILL), key=key)
+        return rd + rp + w
+    raise ValueError(f"unknown priority {priority!r}")
+
+
+# --------------------------------------------------------------------- #
+# replacement
+# --------------------------------------------------------------------- #
+
+
+def select_victim(policy: str, candidates: Sequence[Request]
+                  ) -> Optional[Request]:
+    """Choose which running request to preempt (paper step 4)."""
+    if not candidates or policy == "pf":
+        return None
+    if policy == "nrf":
+        return max(candidates, key=lambda r: (r.arrival, r.rid))
+    if policy == "srf":
+        return min(candidates, key=lambda r: (r.m, -r.arrival, -r.rid))
+    if policy == "lrf":
+        return max(candidates, key=lambda r: (r.m, r.arrival, r.rid))
+    raise ValueError(f"unknown replacement policy {policy!r}")

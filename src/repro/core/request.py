@@ -1,0 +1,113 @@
+"""Inference request state machine (paper §3, Table 1).
+
+Bookkeeping invariants (checked by property tests):
+  * ``m``          — processed tokens currently held in the KV cache
+  * ``generated``  — output tokens produced so far
+  * target context = I + generated  (refill reprocesses generated tokens)
+  * a token is generated exactly when m reaches I + generated
+  * peak KV usage  = I + O - 1  (the O-th token is never cached)
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"   # running, still processing prompt (or refill)
+    DECODE = "decode"     # running, generating
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    rid: int
+    input_len: int                     # I
+    output_len: int                    # O — ground truth; ONLY hypothetical
+    #                                    schedulers / the simulator read it.
+    arrival: float = 0.0
+    prompt: Optional[List[int]] = None  # real token ids (engine mode)
+
+    # --- dynamic state ---
+    m: int = 0
+    generated: int = 0
+    running: bool = False
+    preemptions: int = 0
+    # --- metrics ---
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+    # --- SRF+Hist bookkeeping ---
+    predicted_output: Optional[float] = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def target_context(self) -> int:
+        """Tokens that must be in cache before the next token can emerge."""
+        return self.input_len + self.generated
+
+    @property
+    def remaining_prefill(self) -> int:
+        return max(0, self.target_context - self.m)
+
+    @property
+    def phase(self) -> Phase:
+        if self.finished:
+            return Phase.FINISHED
+        if not self.running:
+            return Phase.WAITING
+        # decode = only the last generated token remains to process
+        if self.generated > 0 and self.remaining_prefill <= 1:
+            return Phase.DECODE
+        return Phase.PREFILL
+
+    @property
+    def finished(self) -> bool:
+        return self.generated >= self.output_len
+
+    @property
+    def peak_kv(self) -> int:
+        return self.input_len + self.output_len - 1
+
+    # ------------------------------------------------------------------ #
+    def advance(self, c: int, now: float) -> bool:
+        """Process c tokens; returns True if a token was generated."""
+        assert self.running and c >= 1, (self.rid, self.running, c)
+        assert self.m + c <= self.target_context, "over-processing"
+        self.m += c
+        if self.m == self.target_context:
+            # prefill completed, or decode step -> one new token
+            self.generated += 1
+            self.token_times.append(now)
+            if self.first_token_time is None:
+                self.first_token_time = now
+            if self.finished:
+                self.finish_time = now
+                self.running = False
+                self.m = 0
+            return True
+        return False
+
+    def preempt(self) -> int:
+        """Evict all KVs; back to waiting. Returns tokens released."""
+        released = self.m
+        self.m = 0
+        self.running = False
+        self.preemptions += 1
+        return released
+
+    # --- metrics helpers ------------------------------------------------ #
+    def latency(self) -> Optional[float]:
+        return None if self.finish_time is None else self.finish_time - self.arrival
+
+    def ttft(self) -> Optional[float]:
+        return (None if self.first_token_time is None
+                else self.first_token_time - self.arrival)
+
+    def tpot(self) -> Optional[float]:
+        if self.finish_time is None or len(self.token_times) < 2:
+            return None
+        return ((self.token_times[-1] - self.token_times[0])
+                / (len(self.token_times) - 1))

@@ -1,0 +1,257 @@
+"""Unified scheduler — the paper's Algorithm 1.
+
+One loop captures ORCA / vLLM / Sarathi / preemption-free variants plus the
+SRF family, via four orthogonal knobs:
+
+  priority     prefill_first | decode_first          (GROUPREQUESTS, step 1)
+  hybrid       mixed prefill+decode batches?         (CHECKHYBRIDBATCHING, 2)
+  chunked      crop prefill c to the token budget?   (CANALLOCATE, step 3)
+  replacement  nrf | srf | lrf | pf                  (PREEMPT..., step 4)
+  reserve      input | peak | context                (Table 2 "initial KV
+               reserve": r.I, r.I+r.O-1 [hypothetical], or S [ORCA])
+
+``get_next_batch`` is pure control logic over Request objects; the
+simulator (cost-model time) and the serving engine (real JAX execution)
+both drive it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.histogram import OutputLengthHistogram
+from repro.core.policies import group_requests, ranking_key, select_victim
+from repro.core.request import Phase, Request
+
+
+@dataclass
+class SchedulerConfig:
+    M: int                       # KV cache size (tokens)
+    C: int                       # token limit per batch
+    S: int = 4096                # model context size (ORCA reservation)
+    priority: str = "prefill_first"
+    replacement: str = "nrf"     # nrf | srf | lrf | pf
+    reserve: str = "input"       # input | peak | context
+    hybrid: bool = False
+    chunked: bool = False
+    ranking: str = "arrival"     # arrival | input | output
+    max_batch_requests: int = 0  # 0 = unbounded
+    use_histogram: bool = False  # SRF+Hist admission gate
+    # Real inference systems (vLLM v0.6.x) never evict running requests to
+    # admit NEW prefills — preemption triggers only when a *running*
+    # request cannot grow.  The paper's literal Algorithm-1 allows
+    # admission-preemption; keep it as an opt-in knob.
+    admission_can_preempt: bool = False
+    max_running: int = 0         # concurrent-request cap (engine slots)
+
+
+@dataclass
+class Batch:
+    items: List[Tuple[Request, int]] = field(default_factory=list)
+    preempted: List[Request] = field(default_factory=list)
+
+    @property
+    def requests(self) -> List[Request]:
+        return [r for r, _ in self.items]
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(c for _, c in self.items)
+
+    def phase_items(self, phase: Phase):
+        return [(r, c) for r, c in self.items if r.phase == phase]
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
+class Scheduler:
+    """Algorithm 1.  Owns the waiting/running queues."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.histogram = OutputLengthHistogram() if cfg.use_histogram else None
+        # stats
+        self.num_preemptions = 0
+        self.num_batches = 0
+
+    # ------------------------------------------------------------------ #
+    def add_request(self, r: Request) -> None:
+        self.waiting.append(r)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # --- memory accounting ------------------------------------------- #
+    def _reservation(self, r: Request, c: int = 0) -> int:
+        """Tokens of KV cache this request holds after processing c more."""
+        if self.cfg.reserve == "input":
+            return r.m + c
+        if self.cfg.reserve == "peak":
+            return max(r.peak_kv, r.m + c)
+        if self.cfg.reserve == "context":
+            return self.cfg.S
+        raise ValueError(self.cfg.reserve)
+
+    # ------------------------------------------------------------------ #
+    def get_next_batch(self) -> Batch:
+        cfg = self.cfg
+        batch = Batch()
+        batch_tokens = 0
+        batch_phase: Optional[Phase] = None
+        protected = set()   # rids already in this batch — not preemptible
+        preempted_now = set()
+
+        candidates = group_requests(self.waiting, self.running,
+                                    priority=cfg.priority, ranking=cfg.ranking)
+        order = {r.rid: i for i, r in enumerate(candidates)}
+        # incremental memory accounting: base reservation of all running
+        # requests + extra reserved by items planned into this batch
+        mem = sum(self._reservation(r, 0) for r in self.running)
+        admitted_waiting: List[Request] = []
+
+        for cand in candidates:
+            if cand.rid in protected or cand.rid in preempted_now or cand.finished:
+                continue
+            if cfg.max_batch_requests and len(batch) >= cfg.max_batch_requests:
+                break
+            phase = (Phase.PREFILL if not cand.running else cand.phase)
+
+            # -- slot cap (engine concurrency limit) ----------------------
+            if (cfg.max_running and not cand.running
+                    and len(self.running) >= cfg.max_running):
+                continue
+
+            # -- step 2: CHECKHYBRIDBATCHING ------------------------------
+            if not cfg.hybrid and batch_phase is not None and phase != batch_phase:
+                continue
+
+            # -- SRF+Hist admission gate (insertion-time deferral) --------
+            if (self.histogram is not None and not cand.running
+                    and self._hist_defer(cand)):
+                continue
+
+            # -- step 3: CANALLOCATE --------------------------------------
+            budget = cfg.C - batch_tokens
+            if budget <= 0:
+                break
+            need = cand.remaining_prefill if phase == Phase.PREFILL else 1
+            if phase == Phase.DECODE:
+                c = 1
+            elif cfg.chunked:
+                c = min(need, budget)
+            else:
+                c = need
+            if c <= 0 or c > budget:
+                continue
+
+            # memory delta of admitting cand with c tokens
+            delta = (self._reservation(cand, c)
+                     - (self._reservation(cand, 0) if cand.running else 0))
+
+            # -- step 4: preempt lower-priority requests on memory pressure
+            admitted = True
+            can_preempt_others = cand.running or cfg.admission_can_preempt
+            while mem + delta > cfg.M:
+                victims = ([r for r in self.running
+                            if r.rid not in protected and r.rid != cand.rid
+                            and order.get(r.rid, 1 << 30) > order[cand.rid]]
+                           if can_preempt_others else [])
+                victim = select_victim(cfg.replacement, victims)
+                if victim is None:
+                    if cand.running and cfg.replacement != "pf":
+                        mem -= self._reservation(cand, 0)
+                        self._preempt(cand)       # self-preemption
+                        preempted_now.add(cand.rid)
+                        batch.preempted.append(cand)
+                    admitted = False
+                    break
+                mem -= self._reservation(victim, 0)
+                self._preempt(victim)
+                preempted_now.add(victim.rid)
+                batch.preempted.append(victim)
+            if not admitted:
+                continue
+
+            # -- admit ----------------------------------------------------
+            if not cand.running:
+                cand.running = True
+                self.running.append(cand)
+                admitted_waiting.append(cand)
+            mem += delta
+            batch.items.append((cand, c))
+            batch_tokens += c
+            protected.add(cand.rid)
+            if batch_phase is None:
+                batch_phase = phase
+
+        if admitted_waiting:
+            admitted_ids = {r.rid for r in admitted_waiting}
+            self.waiting = [r for r in self.waiting if r.rid not in admitted_ids]
+        self.num_batches += 1 if batch.items else 0
+        return batch
+
+    # ------------------------------------------------------------------ #
+    def _hist_defer(self, cand: Request) -> bool:
+        """SRF+Hist: defer admission if the predicted peak demand of
+        running + cand would exceed M (avoids future preemptions)."""
+        assert self.histogram is not None
+        pred_o = self.histogram.predict(cand.input_len)
+        cand.predicted_output = pred_o
+        demand = cand.input_len + pred_o - 1
+        for r in self.running:
+            ro = (r.predicted_output if r.predicted_output is not None
+                  else self.histogram.predict(r.input_len))
+            demand += min(r.input_len + ro - 1, self.cfg.S)
+        return demand > self.cfg.M
+
+    def _preempt(self, victim: Request) -> None:
+        victim.preempt()
+        self.num_preemptions += 1
+        if victim in self.running:
+            self.running.remove(victim)
+        self.waiting.append(victim)
+
+    # ------------------------------------------------------------------ #
+    def complete(self, r: Request) -> None:
+        """Called by the driver after r.advance() finished the request."""
+        if r in self.running:
+            self.running.remove(r)
+        if self.histogram is not None:
+            self.histogram.observe(r.input_len, r.output_len)
+
+
+# --------------------------------------------------------------------- #
+# factory for the paper's named schedulers (Tables 2 & 4)
+# --------------------------------------------------------------------- #
+
+def make_scheduler(name: str, M: int, *, S: int = 4096,
+                   replacement: Optional[str] = None,
+                   ranking: str = "arrival",
+                   use_histogram: bool = False) -> Scheduler:
+    name = name.lower()
+    presets = {
+        "vllm": dict(C=S, priority="prefill_first", hybrid=False, chunked=False),
+        "vllm_hy": dict(C=S, priority="prefill_first", hybrid=True, chunked=False),
+        "sarathi": dict(C=512, priority="decode_first", hybrid=True, chunked=True),
+        "sarathi_cs": dict(C=S, priority="decode_first", hybrid=True, chunked=True),
+        "sarathi_nocp": dict(C=S, priority="decode_first", hybrid=True, chunked=False),
+        "sarathi_nohy": dict(C=S, priority="decode_first", hybrid=False, chunked=False),
+        "orca": dict(C=S, priority="decode_first", hybrid=True, chunked=False),
+    }
+    base = name.removesuffix("_pf")
+    if base not in presets:
+        raise ValueError(f"unknown scheduler {name!r}")
+    kw = dict(presets[base])
+    reserve = "input"
+    repl = replacement or "nrf"
+    if base == "orca":
+        reserve = "context"
+        repl = replacement or "pf"
+    if name.endswith("_pf"):
+        reserve, repl = "peak", "pf"   # hypothetical *pf variants
+    cfg = SchedulerConfig(M=M, S=S, reserve=reserve, replacement=repl,
+                          ranking=ranking, use_histogram=use_histogram, **kw)
+    return Scheduler(cfg)

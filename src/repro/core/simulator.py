@@ -1,0 +1,178 @@
+"""InferMax-style simulation loop (paper Fig. 1, blue boxes).
+
+Drives the unified ``Scheduler`` (Algorithm 1) with a ``CostModel``
+instead of GPUs: each batch advances virtual time by the model's predicted
+batch time.  Produces the metrics of §5.1 (latency, TTFT, TPOT, TPS),
+preemption counts, and per-batch logs (memory usage, batch size) used by
+every multi-batch figure (9, 11, 12, 14, App. A-D).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import BatchSpec, CostModel
+from repro.core.request import Phase, Request
+from repro.core.scheduler import Batch, Scheduler
+
+
+@dataclass
+class BatchLog:
+    t_start: float
+    t_end: float
+    num_prefill: int
+    num_decode: int
+    tokens: int
+    kv_used: int
+    preempted: int
+
+
+@dataclass
+class SimResult:
+    requests: List[Request]
+    batches: List[BatchLog] = field(default_factory=list)
+    num_preemptions: int = 0
+
+    # --- aggregate metrics (§5.1) -------------------------------------- #
+    @property
+    def makespan(self) -> float:
+        return max((b.t_end for b in self.batches), default=0.0)
+
+    @property
+    def latency(self) -> float:
+        """End-to-end latency: time until the LAST request finishes."""
+        return max((r.finish_time or 0.0) for r in self.requests)
+
+    @property
+    def mean_latency(self) -> float:
+        ls = [r.latency() for r in self.requests if r.latency() is not None]
+        return sum(ls) / len(ls) if ls else 0.0
+
+    @property
+    def mean_ttft(self) -> float:
+        ts = [r.ttft() for r in self.requests if r.ttft() is not None]
+        return sum(ts) / len(ts) if ts else 0.0
+
+    @property
+    def max_ttft(self) -> float:
+        ts = [r.ttft() for r in self.requests if r.ttft() is not None]
+        return max(ts) if ts else 0.0
+
+    @property
+    def mean_tpot(self) -> float:
+        ts = [r.tpot() for r in self.requests if r.tpot() is not None]
+        return sum(ts) / len(ts) if ts else 0.0
+
+    @property
+    def tps(self) -> float:
+        tok = sum(r.generated for r in self.requests)
+        return tok / self.makespan if self.makespan else 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        bs = [b.num_prefill + b.num_decode for b in self.batches]
+        return sum(bs) / len(bs) if bs else 0.0
+
+    @property
+    def mean_kv_used(self) -> float:
+        ks = [b.kv_used for b in self.batches]
+        return sum(ks) / len(ks) if ks else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "latency": self.latency,
+            "mean_latency": self.mean_latency,
+            "mean_ttft": self.mean_ttft,
+            "max_ttft": self.max_ttft,
+            "mean_tpot": self.mean_tpot,
+            "tps": self.tps,
+            "preemptions": float(self.num_preemptions),
+            "batches": float(len(self.batches)),
+            "mean_batch_size": self.mean_batch_size,
+            "mean_kv_used": self.mean_kv_used,
+        }
+
+
+def _spec_of(batch: Batch) -> BatchSpec:
+    spec = BatchSpec()
+    for r, c in batch.items:
+        # phase *before* processing: decode iff exactly one token to go
+        # and at least one token already generated
+        if r.generated > 0 and r.remaining_prefill == c == 1:
+            spec.decodes.append((c, r.m))
+        else:
+            spec.prefills.append((c, r.m))
+    return spec
+
+
+def simulate(scheduler: Scheduler, requests: Sequence[Request],
+             cost_model: CostModel, *, max_batches: int = 2_000_000,
+             record_batches: bool = True) -> SimResult:
+    """Run the schedule to completion under virtual (cost-model) time."""
+    pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    now = 0.0
+    result = SimResult(requests=list(requests))
+    i = 0
+
+    for _ in range(max_batches):
+        # admit arrivals (paper Alg. 1 line 4: fetch new requests)
+        while i < len(pending) and pending[i].arrival <= now + 1e-12:
+            scheduler.add_request(pending[i])
+            i += 1
+        if not scheduler.has_work():
+            if i >= len(pending):
+                break
+            now = pending[i].arrival          # idle: jump to next arrival
+            continue
+
+        batch = scheduler.get_next_batch()
+        if not batch.items:
+            if i < len(pending):              # blocked: wait for arrivals
+                now = max(now, pending[i].arrival)
+                continue
+            raise RuntimeError(
+                "scheduler deadlock: work remains but empty batch "
+                f"(waiting={len(scheduler.waiting)}, "
+                f"running={len(scheduler.running)})")
+
+        spec = _spec_of(batch)
+        preempt_before = scheduler.num_preemptions
+        dt = cost_model.batch_time(spec)
+        now += dt
+        for r, c in batch.items:
+            r.advance(c, now)
+            if r.finished:
+                scheduler.complete(r)
+        if record_batches:
+            kv_used = sum(r.m for r in scheduler.running)
+            result.batches.append(BatchLog(
+                t_start=now - dt, t_end=now,
+                num_prefill=len(spec.prefills), num_decode=len(spec.decodes),
+                tokens=spec.total_tokens, kv_used=kv_used,
+                preempted=scheduler.num_preemptions - preempt_before))
+    else:
+        raise RuntimeError("simulation did not converge (max_batches hit)")
+
+    result.num_preemptions = scheduler.num_preemptions
+    return result
+
+
+# --------------------------------------------------------------------- #
+# convenience: run one named scheduler over a workload
+# --------------------------------------------------------------------- #
+
+def run_sim(scheduler_name: str, requests: Sequence[Request],
+            cost_model: CostModel, *, M: int, S: int = 4096,
+            replacement: Optional[str] = None, ranking: str = "arrival",
+            use_histogram: bool = False) -> SimResult:
+    from repro.core.scheduler import make_scheduler
+
+    sched = make_scheduler(scheduler_name, M, S=S, replacement=replacement,
+                           ranking=ranking, use_histogram=use_histogram)
+    return simulate(sched, requests, cost_model)
+
+
+def fresh_requests(spec: Sequence[Tuple[int, int, float]]) -> List[Request]:
+    """[(I, O, arrival)] -> new Request objects with sequential rids."""
+    return [Request(rid=i, input_len=I, output_len=O, arrival=a)
+            for i, (I, O, a) in enumerate(spec)]

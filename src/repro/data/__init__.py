@@ -1,0 +1,14 @@
+"""Data substrate: synthetic token pipeline + inference workloads."""
+from repro.data.synthetic import (  # noqa: F401
+    DataConfig,
+    batch_for_step,
+    batch_with_frontend,
+    data_iterator,
+)
+from repro.data.workloads import (  # noqa: F401
+    GROUPS,
+    azureconv_like,
+    fixed_grid,
+    hetero_mix,
+    longform_like,
+)

@@ -1,0 +1,90 @@
+"""Inference workload generators (paper §5.5, §8, App. C).
+
+* fixed (I, O) grids — §5's controlled sweeps
+* SISO/SILO/LISO/LILO heterogeneous mixes — App. C
+* AzureConv-like online conversation trace — §8 (lognormal lengths,
+  Poisson-ish arrivals over an hour; avg I≈1.2K max 14.1K, avg O≈0.2K
+  max 1K)
+* LongForm-like offline generation trace — §8 (avg I≈250 max 8.4K,
+  avg O≈380 max 3.8K; uniform arrivals over 100 s)
+
+All return ``List[Request]`` with real token ids optional (engine mode).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.request import Request
+
+
+def _mk(spec: Sequence[Tuple[int, int, float]],
+        vocab: Optional[int] = None, seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, (I, O, a) in enumerate(spec):
+        prompt = (rng.integers(0, vocab, size=I).tolist()
+                  if vocab is not None else None)
+        out.append(Request(rid=i, input_len=int(I), output_len=int(O),
+                           arrival=float(a), prompt=prompt))
+    return out
+
+
+def fixed_grid(W: int, I: int, O: int, *, vocab: Optional[int] = None,
+               seed: int = 0) -> List[Request]:
+    """W identical offline requests (paper §5.5 workloads)."""
+    return _mk([(I, O, 0.0)] * W, vocab=vocab, seed=seed)
+
+
+GROUPS = {
+    "SISO": ((8, 16), (8, 16)),
+    "SILO": ((8, 16), (512, 1024)),
+    "LISO": ((512, 1024), (8, 16)),
+    "LILO": ((512, 1024), (512, 1024)),
+}
+
+
+def hetero_mix(groups: Sequence[str], W: int, *, seed: int = 0,
+               vocab: Optional[int] = None) -> List[Request]:
+    """Shuffled mix of two (or more) App.-C groups, offline arrivals."""
+    rng = np.random.default_rng(seed)
+    spec = []
+    for i in range(W):
+        g = GROUPS[groups[i % len(groups)]]
+        I = int(rng.choice(g[0]))
+        O = int(rng.choice(g[1]))
+        spec.append((I, O, 0.0))
+    rng.shuffle(spec)
+    return _mk(spec, vocab=vocab, seed=seed + 1)
+
+
+def _lognormal(rng, mean: float, maximum: float, n: int) -> np.ndarray:
+    """Lognormal with the given mean, clipped at maximum (>= 1)."""
+    sigma = 1.0
+    mu = math.log(mean) - sigma ** 2 / 2
+    x = rng.lognormal(mu, sigma, size=n)
+    return np.clip(x, 1, maximum).astype(int)
+
+
+def azureconv_like(n: int = 512, *, duration_s: float = 3600.0,
+                   o_scale: float = 1.0, seed: int = 0,
+                   vocab: Optional[int] = None) -> List[Request]:
+    """Online conversation trace with AzureConv's published statistics."""
+    rng = np.random.default_rng(seed)
+    I = _lognormal(rng, 1200, 14_100, n)
+    O = np.maximum((_lognormal(rng, 200, 1000, n) * o_scale), 1).astype(int)
+    arrivals = np.sort(rng.uniform(0.0, duration_s, size=n))
+    return _mk(list(zip(I, O, arrivals)), vocab=vocab, seed=seed + 1)
+
+
+def longform_like(n: int = 256, *, duration_s: float = 100.0,
+                  o_scale: float = 1.0, seed: int = 0,
+                  vocab: Optional[int] = None) -> List[Request]:
+    """Long-form generation trace (uniform arrivals in [0, 100 s])."""
+    rng = np.random.default_rng(seed)
+    I = _lognormal(rng, 250, 8_400, n)
+    O = np.maximum((_lognormal(rng, 380, 3_800, n) * o_scale), 1).astype(int)
+    arrivals = rng.uniform(0.0, duration_s, size=n)
+    return _mk(list(zip(I, O, arrivals)), vocab=vocab, seed=seed + 1)

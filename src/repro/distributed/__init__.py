@@ -1,0 +1,24 @@
+"""Distribution: sharding rules, collectives, compression, fault tolerance."""
+from repro.distributed.collectives import (  # noqa: F401
+    decode_attn_reference,
+    flash_decode_seqsharded,
+    make_seqsharded_decode_attn,
+)
+from repro.distributed.compression import (  # noqa: F401
+    compress_with_feedback,
+    compressed_psum,
+    init_error_state,
+)
+from repro.distributed.fault_tolerance import (  # noqa: F401
+    StragglerMonitor,
+    elastic_remesh,
+    reshard,
+    run_with_retries,
+)
+from repro.distributed.sharding import (  # noqa: F401
+    batch_pspecs,
+    dp_axes,
+    named,
+    out_pspecs_decode,
+    param_pspecs,
+)

@@ -1,0 +1,41 @@
+"""Jitted wrapper: (B,S,H,D) layout, padding, interpret-mode switch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "prefix_len",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, prefix_len: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q (B,S,H,D); k,v (B,S,Hkv,D) -> (B,S,H,D).
+
+    Pads S to a block multiple (padded queries attend only to themselves via
+    the causal mask and are cropped after).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    B, S, H, D = q.shape
+    bq = min(block_q, max(16, 1 << (S - 1).bit_length()))
+    bk = min(block_k, bq)
+    Sp = ((S + bq - 1) // bq) * bq
+    if Sp != S:
+        pad = [(0, 0), (0, Sp - S), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+    out = flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        prefix_len=prefix_len, block_q=bq, block_k=bk, interpret=interpret)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :S] if Sp != S else out

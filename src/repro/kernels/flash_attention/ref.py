@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        prefix_len: int = 0) -> jnp.ndarray:
+    """q (B,S,H,D); k,v (B,S,Hkv,D) -> (B,S,H,D). fp32 softmax."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = qp >= kp
+        if window:
+            mask &= (qp - kp) < window
+        if prefix_len:
+            mask |= kp < prefix_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, D)

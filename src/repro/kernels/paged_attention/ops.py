@@ -1,0 +1,51 @@
+"""Jitted wrappers for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import paged_decode_bhd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                           context_lens: jnp.ndarray, *,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """q (B,H,D); pools (P, page, Hkv, D); block_tables (B, npages) int32;
+    context_lens (B,) int32 -> (B,H,D)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, H, D = q.shape
+    Hkv = k_pool.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    out = paged_decode_bhd(qg, k_pool, v_pool,
+                           block_tables.astype(jnp.int32),
+                           context_lens.astype(jnp.int32),
+                           interpret=interpret)
+    return out.reshape(B, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+def decode_attention_dense(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           context_lens: jnp.ndarray, *, page_size: int = 64,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Dense-cache decode through the paged kernel: the contiguous cache
+    (B, S, Hkv, D) is viewed as a page pool with identity block tables.
+    q (B,H,D) -> (B,H,D)."""
+    B, S, Hkv, D = k.shape
+    assert S % page_size == 0, (S, page_size)
+    npages = S // page_size
+    k_pool = k.reshape(B * npages, page_size, Hkv, D)
+    v_pool = v.reshape(B * npages, page_size, Hkv, D)
+    block_tables = (jnp.arange(B)[:, None] * npages +
+                    jnp.arange(npages)[None, :]).astype(jnp.int32)
+    return paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                  context_lens, interpret=interpret)

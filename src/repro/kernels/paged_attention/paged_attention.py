@@ -1,0 +1,105 @@
+"""Paged decode attention (Pallas, TPU target) — flash-decoding over pages.
+
+One grid instance per (batch, kv-head, page): the page index comes from the
+*scalar-prefetched* block table (``PrefetchScalarGridSpec``), i.e. the
+BlockSpec index_map dereferences ``block_tables[b, ip]`` — the TPU DMA
+engine streams exactly the pages owned by the request, never the whole
+pool.  The fp32 (acc, m, l) scratch persists across the page axis
+(innermost, sequential on TPU); pages beyond ``context_len`` are skipped
+with ``pl.when`` so short requests cost O(their length), which is exactly
+the ``m``-linear decode cost the paper's cost model assumes.
+
+This is the TPU-native adaptation of vLLM's CUDA PagedAttention: instead
+of a warp-per-token gather, pages are DMA'd as (page_size, D) VMEM tiles
+and the G=H/Hkv query heads of a kv head are batched into a single
+(G, page_size) MXU matmul.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(block_tables_ref, context_lens_ref,  # scalar prefetch
+               q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref, *,
+               page_size: int, scale: float):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    npages = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ctx = context_lens_ref[b]
+    in_range = ip * page_size < ctx
+
+    @pl.when(in_range)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, page)
+        pos = ip * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < ctx, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ip == npages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_bhd(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                     block_tables: jnp.ndarray, context_lens: jnp.ndarray, *,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q (B, Hkv, G, D); pools (P, page, Hkv, D) -> out (B, Hkv, G, D)."""
+    B, Hkv, G, D = q.shape
+    P, page, _, _ = k_pool.shape
+    npages = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_pa_kernel, page_size=page, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, npages),
+        in_specs=[
+            # q: all G heads of this kv head
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ip, bt, cl: (b, h, 0, 0)),
+            # k/v page selected through the block table
+            pl.BlockSpec((1, page, 1, D), lambda b, h, ip, bt, cl: (bt[b, ip], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D), lambda b, h, ip, bt, cl: (bt[b, ip], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ip, bt, cl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, q, k_pool, v_pool)

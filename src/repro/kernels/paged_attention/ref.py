@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                           context_lens: jnp.ndarray) -> jnp.ndarray:
+    """q (B,H,D); pools (P, page, Hkv, D); block_tables (B, npages);
+    context_lens (B,) -> out (B,H,D)."""
+    B, H, D = q.shape
+    page = k_pool.shape[1]
+    Hkv = k_pool.shape[2]
+    G = H // Hkv
+    npages = block_tables.shape[1]
+    S = npages * page
+    k = k_pool[block_tables].reshape(B, S, Hkv, D)  # gather pages
+    v = v_pool[block_tables].reshape(B, S, Hkv, D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    valid = jnp.arange(S)[None] < context_lens[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
+    return out.reshape(B, H, D)

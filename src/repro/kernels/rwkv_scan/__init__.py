@@ -1,0 +1,2 @@
+from repro.kernels.rwkv_scan import ops, ref  # noqa: F401
+from repro.kernels.rwkv_scan.ops import wkv6  # noqa: F401

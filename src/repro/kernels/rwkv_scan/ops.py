@@ -1,0 +1,23 @@
+"""Jitted wrapper for the chunked WKV6 kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv_scan.rwkv_scan import wkv6_chunked
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
+    """r,k,v,w (B,S,H,D); u (H,D) -> (y fp32, S_last (B,H,D,D))."""
+    if interpret is None:
+        interpret = _on_cpu()
+    f32 = lambda t: t.astype(jnp.float32)
+    return wkv6_chunked(f32(r), f32(k), f32(v), f32(w), f32(u),
+                        chunk=chunk, interpret=interpret)

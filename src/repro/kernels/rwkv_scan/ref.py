@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the WKV6 recurrence: naive per-token scan."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_reference(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   w: jnp.ndarray, u: jnp.ndarray,
+                   s0: jnp.ndarray | None = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w: (B,S,H,D) fp32 (w in (0,1)); u: (H,D); s0: (B,H,D,D).
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t S_{t-1} + (r_t . u . k_t) v_t
+    Returns (y (B,S,H,D), S_last (B,H,D,D)).
+    """
+    B, S, H, D = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(Sm, xs):
+        rt, kt, vt, wt = xs  # (B,H,D) each
+        y = jnp.einsum("bhd,bhde->bhe", rt, Sm)
+        y = y + jnp.einsum("bhd,bhd->bh", rt * u[None], kt)[..., None] * vt
+        Sn = wt[..., None] * Sm + jnp.einsum("bhd,bhe->bhde", kt, vt)
+        return Sn, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))  # (S,B,H,D)
+    S_last, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), S_last

@@ -1,0 +1,113 @@
+"""Chunked WKV6 recurrence (Pallas, TPU target).
+
+Grid = (B, H, num_chunks); the chunk axis is innermost/sequential, so the
+per-(batch, head) fp32 state S (D x D) lives in VMEM scratch across chunks.
+Within a chunk of Q steps the recurrence is evaluated in closed form
+(GLA-style):
+
+    y_t  = (r_t . W_{t-1}) S_0 + sum_{s<t} <r_t . W_{t-1}/W_s, k_s> v_s
+           + <r_t . u, k_t> v_t
+    S_Q  = diag(W_Q) S_0 + sum_s diag(W_Q / W_s) k_s^T v_s
+
+where W_t = prod_{s<=t} w_s (per channel, cumulative within chunk).  All
+contractions are (Q,D)x(D,D) / (Q,Q)x(Q,D) MXU matmuls instead of S
+sequential rank-1 updates — this is the TPU adaptation of the CUDA
+wkv kernel (which parallelizes over channels, not time).
+
+VMEM per instance (Q=64, D=64): 4 inputs x 16 KB + S 16 KB + intra 16 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref,
+                s_ref, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    rq = r_ref[0, 0, 0].astype(jnp.float32)          # (Q, D)
+    kq = k_ref[0, 0, 0].astype(jnp.float32)
+    vq = v_ref[0, 0, 0].astype(jnp.float32)
+    wq = w_ref[0, 0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)              # (D,)
+
+    logw = jnp.log(wq)
+    logW = jnp.cumsum(logw, axis=0)               # (Q, D)
+    W = jnp.exp(logW)
+    Wm1 = jnp.exp(logW - logw)                    # W_{t-1}
+
+    S0 = s_ref[...]                                # (D, D)
+    rW = rq * Wm1
+    y = jax.lax.dot_general(rW, S0, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    att = jax.lax.dot_general(rW, kq / W, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q, Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, att.shape, 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, att.shape, 1)
+    att = jnp.where(qi > si, att, 0.0)            # strictly lower triangular
+    y = y + jax.lax.dot_general(att, vq, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    diag = jnp.sum(rq * u[None, :] * kq, axis=1, keepdims=True)
+    y = y + diag * vq
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    WQ = W[-1]                                     # (D,)
+    S_new = WQ[:, None] * S0 + jax.lax.dot_general(
+        kq * (WQ[None, :] / W), vq, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_ref[...] = S_new
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        s_out_ref[0, 0] = S_new
+
+
+def wkv6_chunked(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w (B,S,H,D); u (H,D) -> (y (B,S,H,D) fp32, S_last (B,H,D,D))."""
+    B, S, H, D = r.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    def idx(b, h, ic):
+        return (b, h, ic, 0)
+
+    # reshape time into (nc, Q) so BlockSpec can slice chunks
+    def chunked(t):
+        return t.reshape(B, nc, Q, H, D).transpose(0, 3, 1, 2, 4)  # (B,H,nc,Q,D)
+
+    rc, kc, vc, wc = map(chunked, (r, k, v, w))
+    kernel = functools.partial(_wkv_kernel, chunk=Q)
+    y, s_last = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, D), lambda b, h, ic: (b, h, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, D), lambda b, h, ic: (b, h, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, D), lambda b, h, ic: (b, h, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, D), lambda b, h, ic: (b, h, ic, 0, 0)),
+            pl.BlockSpec((1, D), lambda b, h, ic: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, D), lambda b, h, ic: (b, h, ic, 0, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, Q, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rc, kc, vc, wc, u)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(B, S, H, D)
+    return y, s_last

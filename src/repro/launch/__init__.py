@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs."""
+from repro.launch.mesh import make_production_mesh, make_test_mesh  # noqa: F401

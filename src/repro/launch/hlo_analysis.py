@@ -1,0 +1,221 @@
+"""HLO-text analysis: collective-byte accounting with while-loop
+trip-count multiplication.
+
+``compiled.cost_analysis()`` does not report collective bytes, so we
+parse the (post-SPMD, per-device) HLO: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op contributes its
+result bytes, multiplied by the trip counts of every while loop it sits
+inside (lax.scan over layers emits a while; nested scans multiply).
+
+Trip counts are recovered from each while's CONDITION computation (the
+scan counter is compared against a literal constant).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)", re.S)
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"\bs32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in an HLO result type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(text: str) -> Dict[str, List[str]]:
+    """name -> list of body lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = _COMP_START_RE.match(line.rstrip())
+        if m and line and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            if cur is not None and line.startswith("}"):
+                cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest s32 literal in the while condition (scan bound)."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    # bytes actually moved over links per device (ring algorithm factors)
+    link_bytes: float = 0.0
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def _multipliers(comps: Dict[str, List[str]], entry: str) -> Dict[str, float]:
+    """Execution-count multiplier per computation (while trip counts)."""
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float) -> None:
+        if name not in comps:
+            return
+        if name in mult and mult[name] >= m:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        body = "\n".join(comps[name])
+        # while ops: body runs trip-count times
+        for wm in _WHILE_RE.finditer(body):
+            cond, wbody = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, []))
+            visit(cond, m * trips)
+            visit(wbody, m * trips)
+        # plain calls / fusions inherit the multiplier
+        for line in comps[name]:
+            if "while(" in line:
+                continue
+            for cm in _CALL_RE.finditer(line):
+                visit(cm.group(1), m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def collective_bytes(hlo_text: str, *, num_devices: int) -> CollectiveStats:
+    comps = split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fall back: biggest computation
+        entry = max(comps, key=lambda k: len(comps[k]), default="")
+    mult = _multipliers(comps, entry)
+
+    stats = CollectiveStats()
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for line in lines:
+            for kind in COLLECTIVES:
+                token = f" {kind}("
+                if token not in line and not line.startswith(kind + "("):
+                    continue
+                lhs = line.split("=", 1)[0] if "=" in line else ""
+                rhs_type = line.split("=", 1)[1] if "=" in line else line
+                b = shape_bytes(rhs_type.split(kind + "(")[0])
+                g = _group_size(line, num_devices)
+                stats.bytes_by_kind[kind] = (
+                    stats.bytes_by_kind.get(kind, 0.0) + m * b)
+                stats.count_by_kind[kind] = (
+                    stats.count_by_kind.get(kind, 0) + int(m))
+                # per-device link traffic (ring algorithms)
+                if kind == "all-reduce":
+                    factor = 2.0 * (g - 1) / max(g, 1)
+                elif kind in ("all-gather", "reduce-scatter"):
+                    factor = (g - 1) / max(g, 1)
+                elif kind == "all-to-all":
+                    factor = (g - 1) / max(g, 1)
+                else:  # collective-permute: point-to-point
+                    factor = 1.0
+                stats.link_bytes += m * b * factor
+                break
+    return stats
+
+
+def convert_traffic_bytes(hlo_text: str) -> float:
+    """Bytes moved by dtype ``convert`` ops (in + out), with while
+    multipliers.  The CPU backend cannot consume bf16 in dots and
+    materializes f32 copies of every bf16 operand — on the TPU target
+    (native bf16 MXU) these ops do not exist, so the §Roofline memory
+    term subtracts them (reported as memory_s_tpu)."""
+    comps = split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k]), default="")
+    mult = _multipliers(comps, entry)
+    total = 0.0
+    cv = re.compile(r"=\s*(\S+)\s+convert\(%[\w\.\-]+\)")
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for line in lines:
+            mm = cv.search(line)
+            if mm:
+                out_b = shape_bytes(mm.group(1))
+                # input is the other precision: f32<->bf16 => in = out/2
+                # or 2*out; approximate in+out as 1.5x the larger
+                total += m * out_b * 1.5
+    return total
+
+
+def duplicate_op_fraction(hlo_text: str) -> float:
+    """Fraction of dot ops appearing with rematerialization suffixes —
+    a cheap remat/redundancy indicator for §Roofline."""
+    dots = re.findall(r"%([\w\.\-]*dot[\w\.\-]*)\s*=", hlo_text)
+    if not dots:
+        return 0.0
+    base = set()
+    dup = 0
+    for d in dots:
+        root = re.sub(r"\.\d+$", "", d)
+        if root in base:
+            dup += 1
+        base.add(root)
+    return dup / len(dots)

@@ -1,0 +1,328 @@
+"""GQA attention with KV cache: reference impl + kernel/distributed dispatch.
+
+Modes
+-----
+* full-sequence (train / prefill): causal (+optional sliding window /
+  prefix-LM) attention over the whole batch.
+* decode: one query token against a dense cache ``(B, S, Hkv, D)`` with a
+  per-request length mask.
+
+``impl`` selects the backend:
+* ``"reference"`` — pure jnp (used by the dry-run and CPU tests),
+* ``"flash"`` / ``"paged"`` — Pallas kernels (TPU target; interpret=True on
+  CPU), see ``repro.kernels``.
+* decode under a sequence-sharded cache goes through
+  ``repro.distributed.collectives.flash_decode_seqsharded`` (shard_map).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (Params, apply_rope, causal_mask, dense_init,
+                                 rms_norm)
+
+
+def merge_softmax_groups(out1, m1, l1, s2, v2):
+    """Numerically-stable merge of a softmax group (out1 with running
+    max m1 / sum l1) with one extra logit s2 / value v2.
+    out1 (B,H,D); m1,l1 (B,H); s2 (B,H); v2 (B,H,D)."""
+    M = jnp.maximum(m1, s2)
+    w1 = l1 * jnp.exp(m1 - M)
+    w2 = jnp.exp(s2 - M)
+    denom = jnp.maximum(w1 + w2, 1e-30)
+    return (out1 * w1[..., None] + v2 * w2[..., None]) / denom[..., None]
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(k4, cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim_,), dtype)
+        p["k_norm"] = jnp.zeros((cfg.head_dim_,), dtype)
+    return p
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = (x @ params["wq"]).reshape(B, S, H, D)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, D)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,D), GQA via head grouping; fp32 softmax."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def _sdpa_flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       lengths: jnp.ndarray, *, chunk: int = 1024
+                       ) -> jnp.ndarray:
+    """One-token decode attention WITHOUT materializing (B, H, S) scores.
+
+    lax.scan over KV chunks carrying fp32 (m, l, acc) — the HLO-level
+    mirror of the Pallas flash-decoding kernel: per-chunk scores live in
+    registers/VMEM-sized tiles, so HBM traffic collapses to the KV reads
+    (§Perf cell A).  q (B,H,D); k/v (B,S,Hkv,D); lengths (B,) valid KVs.
+    """
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    n = S // Q
+    qg = (q.reshape(B, Hkv, G, D).astype(jnp.float32)
+          / jnp.sqrt(jnp.asarray(D, jnp.float32)))
+    kc = k.reshape(B, n, Q, Hkv, D).swapaxes(0, 1)
+    vc = v.reshape(B, n, Q, Hkv, D).swapaxes(0, 1)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        i, kq, vq = inp
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, kq.astype(jnp.float32))
+        pos = i * Q + jnp.arange(Q)
+        s = jnp.where(pos[None, None, None, :] < lengths[:, None, None, None],
+                      s, -1e30)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = (alpha[..., None] * acc
+               + jnp.einsum("bhgk,bkhd->bhgd", p, vq.astype(jnp.float32)))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def attention_full(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                   positions: jnp.ndarray, *, prefix_len: int = 0,
+                   impl: str = "reference",
+                   cache_len: int = 0) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Train / prefill attention.  Returns (out, cache_or_None).
+
+    cache_len > 0 => also emit a KV cache padded/cropped to that length.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, window=cfg.window,
+                                     prefix_len=prefix_len)
+    else:
+        mask = causal_mask(positions, positions, window=cfg.window,
+                           prefix_len=prefix_len)
+        out = _sdpa(q, k, v, mask)
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+
+    cache = None
+    if cache_len:
+        if cache_len >= S:
+            pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+            cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        else:
+            # sliding-window cache keeps the last `cache_len` KVs, stored in
+            # ring order (row = position % cache_len) so that decode's
+            # ring-buffer writes stay aligned.
+            s0 = (S - cache_len) % cache_len
+            cache = {"k": jnp.roll(k[:, -cache_len:], s0, axis=1),
+                     "v": jnp.roll(v[:, -cache_len:], s0, axis=1)}
+    return out, cache
+
+
+def attention_chunk(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    cache: Dict, start: jnp.ndarray, *,
+                    impl: str = "reference") -> Tuple[jnp.ndarray, Dict]:
+    """Chunked prefill against an existing cache (engine path).
+
+    x: (B, c, d) — the next c prompt tokens of each request, whose first
+    absolute position is ``start[b]``; cache[k|v]: (B, Smax, Hkv, D) holds
+    the first ``start[b]`` KVs (ring order when cfg.window, in which case
+    c <= window is required so no in-chunk slot collision can occur).
+    """
+    B, c, _ = x.shape
+    Smax = cache["k"].shape[1]
+    positions = start[:, None] + jnp.arange(c)[None, :]        # (B, c)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    qpos = positions[:, :, None]                               # (B, c, 1)
+    sidx = jnp.arange(Smax)[None, None, :]                     # (1, 1, Smax)
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, c))
+    if cfg.window:
+        if cfg.window != Smax:
+            raise ValueError("window cache must be exactly window-sized")
+        assert c <= cfg.window, (c, cfg.window)
+        # Attend BEFORE writing: chunk tokens would overwrite ring slots
+        # still visible to earlier in-chunk queries.  Keys = old ring
+        # content (positions reconstructed per slot) ++ the chunk itself.
+        prev_newest = (start - 1)[:, None, None]
+        key_pos_old = prev_newest - jnp.mod(prev_newest - sidx, Smax)
+        mask_old = ((key_pos_old >= 0) & (key_pos_old <= qpos)
+                    & (qpos - key_pos_old < cfg.window))       # (B, c, Smax)
+        kpos_new = positions[:, None, :]                       # (B, 1, c)
+        mask_new = ((kpos_new <= qpos)
+                    & (qpos - kpos_new < cfg.window))          # (B, c, c)
+        keys = jnp.concatenate([cache["k"], k], axis=1)
+        vals = jnp.concatenate([cache["v"], v], axis=1)
+        mask = jnp.concatenate(
+            [mask_old, jnp.broadcast_to(mask_new, (B, c, c))], axis=2)
+        out = _sdpa(q, keys, vals, mask)
+        slots = jnp.mod(positions, Smax)
+        new_k = cache["k"].at[rows, slots].set(k)
+        new_v = cache["v"].at[rows, slots].set(v)
+    else:
+        slots = jnp.minimum(positions, Smax - 1)
+        new_k = cache["k"].at[rows, slots].set(k)
+        new_v = cache["v"].at[rows, slots].set(v)
+        mask = sidx <= qpos                                    # causal
+        out = _sdpa(q, new_k, new_v, mask)
+    out = out.reshape(B, c, cfg.q_dim) @ params["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+def attention_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                     cache: Dict, cache_index: jnp.ndarray, *,
+                     impl: str = "reference",
+                     seq_shards: int = 1) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. x: (B, 1, d); cache[k|v]: (B, Smax, Hkv, D);
+    cache_index: (B,) number of valid cache entries (also the position)."""
+    B = x.shape[0]
+    Smax = cache["k"].shape[1]
+    positions = cache_index[:, None]  # (B, 1)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    if cfg.window and cfg.window < Smax:
+        raise ValueError("window cache must be exactly window-sized")
+
+    if cfg.window:
+        # ring-buffer write for sliding-window cache
+        slot = jnp.mod(cache_index, Smax)
+    else:
+        slot = jnp.minimum(cache_index, Smax - 1)
+    bidx = jnp.arange(B)
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+
+    valid = jnp.arange(Smax)[None, :] < jnp.minimum(cache_index + 1, Smax)[:, None]
+    if impl == "seqsharded":
+        # shard_map region: each 'model' shard flash-decodes its slice of
+        # the sequence, then one small psum combines (beyond-paper §Perf:
+        # k-way seq-sharding multiplies aggregate HBM bandwidth for the
+        # KV reads AND keeps score tensors shard-local)
+        from repro.distributed.collectives import make_seqsharded_decode_attn
+        from repro.distributed.context import get_mesh
+        mesh = get_mesh()
+        if mesh is None:
+            raise ValueError("impl='seqsharded' needs distributed.context"
+                             ".set_mesh(mesh)")
+        fn = make_seqsharded_decode_attn(mesh)
+        out = fn(q[:, 0], new_k, new_v, jnp.minimum(cache_index + 1, Smax))
+    elif impl == "paged":
+        from repro.kernels.paged_attention import ops as pa_ops
+        out = pa_ops.decode_attention_dense(q[:, 0], new_k, new_v,
+                                            jnp.minimum(cache_index + 1, Smax))
+    elif impl == "flash_jnp":
+        out = _sdpa_flash_decode(q[:, 0], new_k, new_v,
+                                 jnp.minimum(cache_index + 1, Smax))
+    else:
+        mask = valid[:, None, :]  # (B, 1, Smax)
+        out = _sdpa(q, new_k, new_v, mask)[:, 0]
+    out = out.reshape(B, cfg.q_dim) @ params["wo"]
+    return out[:, None, :], {"k": new_k, "v": new_v}
+
+
+def attention_decode_deferred(params: Params, cfg: ModelConfig,
+                              x: jnp.ndarray, cache: Dict,
+                              cache_index: jnp.ndarray, *,
+                              impl: str = "reference"
+                              ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode with a READ-ONLY cache (§Perf cell A).
+
+    The new token's (k, v) are NOT written here — they are returned as a
+    delta and scattered into the stacked cache ONCE per step by the
+    caller (``decode_step(append='deferred')``), instead of once per
+    layer: the per-layer dynamic-update-slice of the full (L, B, S, ...)
+    buffer is what dominated the baseline's HBM-byte count.  Attention
+    over the old cache is merged with the new token's contribution by a
+    stable two-group softmax combine.
+    """
+    B = x.shape[0]
+    Smax = cache["k"].shape[1]
+    positions = cache_index[:, None]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]         # (B, H*, D)
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    G = H // Hkv
+
+    # valid OLD entries: index, capped by the ring size; when the ring is
+    # full the slot the new token will overwrite has EXPIRED (its
+    # position is index - W, outside the window) -> mask it out.
+    n_valid = jnp.minimum(cache_index, Smax)
+    valid = jnp.arange(Smax)[None, :] < n_valid[:, None]
+    if cfg.window:
+        expired = (jnp.arange(Smax)[None, :] == jnp.mod(cache_index, Smax)[:, None]) \
+            & (cache_index[:, None] >= Smax)
+        valid &= ~expired
+
+    if impl == "seqsharded":
+        from repro.distributed.collectives import (
+            make_seqsharded_decode_attn_partials)
+        from repro.distributed.context import get_mesh
+        mesh = get_mesh()
+        if mesh is None:
+            raise ValueError("impl='seqsharded' needs set_mesh(mesh)")
+        out1, m1, l1 = make_seqsharded_decode_attn_partials(mesh)(
+            q1, cache["k"], cache["v"], n_valid)
+    else:
+        from repro.distributed.collectives import decode_attn_partials
+        out1, m1, l1 = decode_attn_partials(q1, cache["k"], cache["v"],
+                                            valid)
+
+    # new token's own logit/value per q head
+    qg = q1.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s2 = jnp.einsum("bhgd,bhd->bhg", qg, k1.astype(jnp.float32))
+    s2 = s2 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    v2 = jnp.broadcast_to(v1.astype(jnp.float32)[:, :, None, :],
+                          (B, Hkv, G, D))
+    out = merge_softmax_groups(
+        out1.reshape(B, Hkv, G, D).astype(jnp.float32),
+        m1.reshape(B, Hkv, G), l1.reshape(B, Hkv, G), s2, v2)
+    out = out.reshape(B, cfg.q_dim).astype(x.dtype) @ params["wo"]
+    return out[:, None, :], {"k_new": k1, "v_new": v1}

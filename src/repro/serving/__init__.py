@@ -1,0 +1,15 @@
+"""Serving layer: continuous-batching engine + jitted serve steps."""
+from repro.serving.engine import (  # noqa: F401
+    Engine,
+    EngineConfig,
+    EngineResult,
+    generate_reference,
+)
+from repro.serving.serve_step import (  # noqa: F401
+    build_decode_fn,
+    build_prefill_fn,
+    build_train_fn,
+    cache_specs,
+    param_specs,
+    serve_input_specs,
+)

@@ -1,0 +1,112 @@
+"""Jitted serve-step builders (used by the engine, examples and the
+multi-pod dry-run).
+
+``build_prefill_fn`` / ``build_decode_fn`` return pure functions of
+(params, batch/cache) with STATIC shapes, suitable for
+``jax.jit(...).lower(...).compile()`` against ShapeDtypeStruct inputs.
+
+``serve_input_specs`` produces the ShapeDtypeStruct stand-ins for every
+input of the given (arch x shape) cell — weak-type-correct, shardable,
+no device allocation (assignment step 2 of the MULTI-POD DRY-RUN).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+
+
+def build_prefill_fn(cfg: ModelConfig, *, cache_len: int,
+                     impl: str = "reference", moe_impl: str = "sparse",
+                     unroll: bool = False) -> Callable:
+    """(params, batch) -> (last-token logits, KV cache)."""
+
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, cache_len=cache_len,
+                         impl=impl, moe_impl=moe_impl, unroll=unroll)
+
+    return prefill_step
+
+
+def build_decode_fn(cfg: ModelConfig, *, impl: str = "reference",
+                    moe_impl: str = "sparse", unroll: bool = False,
+                    append: str = "inline") -> Callable:
+    """(params, tokens, cache) -> (logits, cache) — one serve_step.
+    append='deferred' uses the once-per-step cache scatter (§Perf)."""
+    step = (M.decode_step_deferred if append == "deferred"
+            else M.decode_step)
+
+    def serve_step(params, tokens, cache):
+        return step(cfg, params, tokens, cache,
+                    impl=impl, moe_impl=moe_impl, unroll=unroll)
+
+    return serve_step
+
+
+def build_train_fn(cfg: ModelConfig, *, impl: str = "reference",
+                   moe_impl: str = "sparse", remat: bool = True,
+                   unroll: bool = False) -> Callable:
+    """(params, batch) -> scalar loss (grad-able train objective)."""
+
+    def loss_fn(params, batch):
+        return M.train_loss(cfg, params, batch, impl=impl,
+                            moe_impl=moe_impl, remat=remat, unroll=unroll)
+
+    return loss_fn
+
+
+# --------------------------------------------------------------------- #
+# ShapeDtypeStruct stand-ins
+# --------------------------------------------------------------------- #
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """Parameter pytree as ShapeDtypeStructs (eval_shape over init)."""
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Any:
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, cache_len))
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Dict[str, Any]:
+    """All inputs of the cell's entry point, as ShapeDtypeStructs.
+
+    train  -> {tokens, labels[, patch_embeds]}
+    prefill-> {tokens[, patch_embeds]}
+    decode -> {tokens (B,), cache}  (one new token against seq_len KVs)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.frontend == "patch":
+            specs["patch_embeds"] = _sds((B, cfg.num_patches, cfg.d_model),
+                                         jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.frontend == "patch":
+            specs["patch_embeds"] = _sds((B, cfg.num_patches, cfg.d_model),
+                                         jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "decode":
+        return {
+            "tokens": _sds((B,), jnp.int32),
+            "cache": cache_specs(cfg, B, S),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,10 @@
+"""Training substrate: AdamW, schedules, microbatched train step."""
+from repro.training.optimizer import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    global_norm,
+    init_adamw,
+    lr_at,
+)
+from repro.training.train_step import make_loss_fn, make_train_step  # noqa: F401

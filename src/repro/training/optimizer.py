@@ -1,0 +1,104 @@
+"""AdamW + LR schedules (raw-JAX, pytree-native, ZeRO-friendly).
+
+Optimizer state is fp32 (master weights + moments) regardless of the
+bf16 compute params; its sharding follows the param sharding (which is
+already FSDP over ``data`` in training mode — ZeRO-1 by construction).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray            # ()
+    master: Any                  # fp32 params
+    mu: Any                      # fp32 first moment
+    nu: Any                      # fp32 second moment
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"     # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * (1 - t)
+    else:
+        decay = jnp.asarray(1.0)
+    return cfg.lr * warm * decay
+
+
+def init_adamw(params: Any) -> AdamWState:
+    """Every leaf owns a DISTINCT buffer: ``astype(f32)`` of an
+    already-fp32 param is a no-op ALIAS, which breaks donating params
+    and opt state to the same step ("donate the same buffer twice")."""
+    f32_copy = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros_distinct = lambda p: p.astype(jnp.float32) * 0.0
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      master=jax.tree.map(f32_copy, params),
+                      mu=jax.tree.map(zeros_distinct, params),
+                      nu=jax.tree.map(zeros_distinct, params))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: AdamWState,
+                 params: Any) -> Tuple[Any, AdamWState, dict]:
+    """Returns (new bf16 params, new state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        m = m - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                      + cfg.weight_decay * m)
+        return m, mu, nu
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.master)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    new = [upd(g, m, mu, nu)
+           for g, m, mu, nu in zip(flat_g, flat_m, flat_mu, flat_nu)]
+    master = treedef.unflatten([n[0] for n in new])
+    mu = treedef.unflatten([n[1] for n in new])
+    nu = treedef.unflatten([n[2] for n in new])
+    new_params = jax.tree.map(
+        lambda m, p: m.astype(p.dtype), master, params)
+    new_state = AdamWState(step=step, master=master, mu=mu, nu=nu)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,72 @@
+"""Train-step builder: microbatched grad accumulation + remat + AdamW.
+
+``make_train_step(cfg, opt_cfg, microbatches=k)`` returns a pure
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for jit/pjit.  The global batch is split into k microbatches scanned
+sequentially (activation memory / k); gradients accumulate in fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update
+
+
+def make_loss_fn(cfg: ModelConfig, *, impl: str = "reference",
+                 moe_impl: str = "sparse", remat: bool = True,
+                 unroll: bool = False) -> Callable:
+    def loss_fn(params, batch):
+        return M.train_loss(cfg, params, batch, impl=impl,
+                            moe_impl=moe_impl, remat=remat, unroll=unroll)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, impl: str = "reference",
+                    moe_impl: str = "sparse", remat: bool = True,
+                    grad_psum_axis: Optional[str] = None,
+                    unroll: bool = False) -> Callable:
+    loss_fn = make_loss_fn(cfg, impl=impl, moe_impl=moe_impl, remat=remat,
+                           unroll=unroll)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def split_mb(batch):
+        def sp(x):
+            B = x.shape[0]
+            assert B % microbatches == 0, (B, microbatches)
+            return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+        return jax.tree.map(sp, batch)
+
+    def train_step(params, opt_state: AdamWState, batch
+                   ) -> Tuple[Any, AdamWState, Dict]:
+        if microbatches > 1:
+            mbs = split_mb(batch)
+
+            def acc_step(carry, mb):
+                loss_sum, g_acc = carry
+                loss, g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_sum + loss, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_step, (0.0, zeros), mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+        if grad_psum_axis:  # shard_map/pmap data-parallel reduction
+            grads = jax.lax.pmean(grads, grad_psum_axis)
+        params, opt_state, metrics = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,154 @@
+"""Cost models (paper §4): Eq. 1-3 values, monotonicity, linear fit."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.cost_model import (BatchSpec, LinearCostModel,
+                                   TheoreticalCostModel, attention_flops_rw,
+                                   calibrated_cost_model, fit_linear_model,
+                                   get_hardware, group_labels_from_theory,
+                                   profile_synthetic)
+from repro.core.five_minute_rule import break_even_table
+from repro.core.slo import balanced_intensity, max_m_for_threshold, pareto_curve
+
+CFG = get_config("llama2-7b")
+HW = get_hardware("a100")
+
+
+def test_attention_eq1_eq2_exact():
+    """Eq. 1: FLOPs = 4c(c+m)HN_Q; Eq. 2 RW with the ceil(c/H) KV term."""
+    H, nq, nkv = CFG.head_dim_, CFG.num_heads, CFG.num_kv_heads
+    c, m = 256, 512
+    fl, rw = attention_flops_rw(c, m, CFG, tp=1, bytes_per_el=2)
+    assert fl == 4 * c * (c + m) * H * nq
+    expect_rw = (2 * c * H * nq + 2 * c * (c + m) * nq
+                 + 2 * int(np.ceil(c / H)) * (c + m) * H * nkv) * 2
+    assert rw == expect_rw
+
+
+def test_batch_time_monotone_in_c_and_m():
+    cm = TheoreticalCostModel(CFG, HW)
+    base = cm.batch_time(BatchSpec(prefills=[(128, 0)], decodes=[(1, 256)]))
+    assert cm.batch_time(BatchSpec(prefills=[(256, 0)],
+                                   decodes=[(1, 256)])) > base
+    assert cm.batch_time(BatchSpec(prefills=[(128, 0)],
+                                   decodes=[(1, 512)])) > base
+    assert cm.batch_time(BatchSpec()) == 0.0
+
+
+def test_decode_attention_bottlenecked_by_m():
+    """§5.2: decode attention time is linear in m (KV reads)."""
+    cm = TheoreticalCostModel(CFG, HW)
+    t1 = cm.op_times(BatchSpec(decodes=[(1, 1000)]))["attn_decode"]
+    t2 = cm.op_times(BatchSpec(decodes=[(1, 2000)]))["attn_decode"]
+    assert t2 / t1 == pytest.approx(2.0, rel=0.05)
+
+
+def test_attention_is_memory_bound_even_for_prefill():
+    """§5.2 Remark: attention points sit in the memory-bound region."""
+    cm = TheoreticalCostModel(CFG, HW)
+    for c, m in [(128, 0), (1024, 0), (4096, 0)]:
+        fl, rw = attention_flops_rw(c, m, CFG, 1, 2)
+        intensity = fl / rw
+        turning = HW.flops / HW.hbm_bw
+        assert intensity < turning  # memory-bound on A100
+
+
+def test_intensity_convergence_formula():
+    """§5.2: intensity -> 2/(1/H + ceil(c/H)N_KV/(cN_Q)); prefill ~ H=128,
+    decode ~ 2."""
+    assert balanced_intensity(128, 32, 32, 4096) == pytest.approx(128, rel=0.05)
+    assert balanced_intensity(128, 32, 32, 1) == pytest.approx(2, rel=0.05)
+
+
+def test_matmul_compute_bound_only_for_large_c():
+    """§5.2: matmuls become compute-bound once c amortizes weight loads."""
+    cm = TheoreticalCostModel(CFG, HW)
+    small = cm.batch_terms(BatchSpec(prefills=[(8, 0)]))
+    large = cm.batch_terms(BatchSpec(prefills=[(8192, 0)]))
+    assert small["memory_s"] > small["compute_s"]
+    assert large["compute_s"] > large["memory_s"]
+
+
+def test_linear_fit_recovers_theory():
+    """Fit on noisy synthetic profiles -> <15% median relative error
+    (paper reports 6% avg / 12% max for its linear models)."""
+    samples = profile_synthetic(CFG, HW, n=300, noise=0.02)
+    lm = fit_linear_model(samples)
+    truth = TheoreticalCostModel(CFG, HW, flops_eff=0.6, bw_eff=0.75,
+                                 attn_bw_eff=0.25)
+    errs = []
+    for spec, _ in profile_synthetic(CFG, HW, seed=1, n=60, noise=0.0):
+        t = truth.batch_time(spec)
+        p = lm.batch_time(spec)
+        errs.append(abs(p - t) / t)
+    assert np.median(errs) < 0.15
+
+
+def test_linear_model_serialization():
+    lm = calibrated_cost_model(CFG, HW)
+    lm2 = LinearCostModel.from_dict(lm.to_dict())
+    spec = BatchSpec(prefills=[(64, 0)], decodes=[(1, 100)] * 4)
+    assert lm.batch_time(spec) == lm2.batch_time(spec)
+
+
+@settings(max_examples=50, deadline=None)
+@given(c=st.integers(1, 4096), m=st.integers(0, 8192),
+       b=st.integers(1, 64))
+def test_property_linear_model_monotone(c, m, b):
+    lm = calibrated_cost_model(CFG, HW)
+    t0 = lm.batch_time(BatchSpec(decodes=[(1, m)] * b))
+    t1 = lm.batch_time(BatchSpec(decodes=[(1, m + 1)] * b))
+    t2 = lm.batch_time(BatchSpec(prefills=[(c, m)], decodes=[(1, m)] * b))
+    assert t1 >= t0 - 1e-12
+    assert t2 >= t0 - 1e-12
+
+
+def test_slo_pareto_monotone_and_feasible():
+    """§5.3: the (c, m) pareto of batch time == threshold; m falls as c
+    grows, and every returned point respects the threshold."""
+    cm = TheoreticalCostModel(CFG, HW, flops_eff=0.6, bw_eff=0.75,
+                              attn_bw_eff=0.25)
+    pts = pareto_curve(cm, num_prefill=8, num_decode=32, threshold=1.0,
+                       cs=(1, 64, 1024, 4096))
+    assert len(pts) >= 2
+    ms = [p.m for p in pts]
+    assert all(a >= b for a, b in zip(ms, ms[1:]))   # m falls with c
+    for p in pts:
+        assert p.batch_time <= 1.0 + 1e-6
+
+
+def test_five_minute_rule_interval_shrinks_with_length():
+    """§6: longer requests -> smaller break-even residency interval; the
+    paper reports [0.33 s, 130 s] on H100 with M=100K."""
+    cm = TheoreticalCostModel(get_config("llama2-7b"), get_hardware("h100"),
+                              flops_eff=0.6, bw_eff=0.75, attn_bw_eff=0.25)
+    table = break_even_table(cm, M=100_000, ns=(1, 64, 4095))
+    ivals = [b.interval for b in table]
+    assert all(a > b for a, b in zip(ivals, ivals[1:]))
+    assert 0.05 < ivals[-1] < 10.0        # seconds-scale for long requests
+    assert 10.0 < ivals[0] < 1000.0       # minutes-scale for 1 KV
+
+
+def test_swap_vs_recompute_turning_point():
+    """§5.4/Fig 8: with activation-cached KV rebuild, swapping wins only
+    below a small turning point (paper: < ~100 KVs); above it the
+    weight-load bias is amortized and recompute wins."""
+    cm = TheoreticalCostModel(CFG, HW, flops_eff=0.6, bw_eff=0.75,
+                              attn_bw_eff=0.25)
+    assert cm.swap_time(8) < cm.kv_projection_time(8)      # tiny: swap wins
+    assert cm.kv_projection_time(65_536) < cm.swap_time(65_536)
+    # turning point is small relative to the cache size M=100K
+    lo, hi = 1, 100_000
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cm.kv_projection_time(mid) < cm.swap_time(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    assert lo < 5_000
+    # the FULL refill (preemption cost) keeps growing superlinearly —
+    # this is why preempting long requests is expensive (§7)
+    assert (cm.recompute_time(4096) / 4096
+            > 1.5 * cm.recompute_time(256) / 256)

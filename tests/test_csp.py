@@ -1,0 +1,105 @@
+"""CSP optimal scheduling (paper §7): optimality, Fig-13 reproduction."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import TheoreticalCostModel, get_hardware
+from repro.core.csp import (exists_schedule_below, solve_optimal_schedule)
+from repro.core.simulator import fresh_requests, run_sim
+
+CFG = get_config("llama2-7b")
+CM = TheoreticalCostModel(CFG, get_hardware("a100"), flops_eff=0.6,
+                          bw_eff=0.75, attn_bw_eff=0.25)
+
+
+def sched_latency(name, reqs_spec, M):
+    reqs = fresh_requests([(I, O, 0.0) for I, O in reqs_spec])
+    return run_sim(name, reqs, CM, M=M).latency
+
+
+def test_csp_single_request():
+    res = solve_optimal_schedule([(4, 2)], M=16, C=4096, cost_model=CM)
+    assert res.feasible
+    assert res.num_batches == 2            # prefill+token, decode+token
+    assert res.num_preemptions == 0
+
+
+def test_csp_never_worse_than_named_schedulers():
+    """The CSP optimum lower-bounds every deployable schedule."""
+    for I, O, M in [(4, 4, 12), (16, 4, 32), (64, 4, 128)]:
+        spec = [(I, O)] * 4
+        opt = solve_optimal_schedule(spec, M=M, C=4096, cost_model=CM)
+        for name in ("vllm", "sarathi", "vllm_pf"):
+            lat = sched_latency(name, spec, M)
+            assert opt.optimal_time <= lat + 1e-12, (I, O, M, name)
+
+
+def test_fig13_preemption_optimal_for_short_requests():
+    """O=W=4, M=max(2I, I+O-1): CSP preempts for small I..."""
+    I, O = 4, 4
+    res = solve_optimal_schedule([(I, O)] * 4, M=max(2 * I, I + O - 1),
+                                 C=4096, cost_model=CM)
+    assert res.num_preemptions > 0
+    pf = sched_latency("vllm_pf", [(I, O)] * 4, max(2 * I, I + O - 1))
+    assert res.optimal_time < pf
+
+
+def test_fig13_preemption_avoided_for_long_requests():
+    """...and avoids preemption for large I (refill cost grows with I)."""
+    I, O = 1024, 4
+    res = solve_optimal_schedule([(I, O)] * 4, M=max(2 * I, I + O - 1),
+                                 C=4096, cost_model=CM)
+    assert res.num_preemptions == 0
+    pf = sched_latency("vllm_pf", [(I, O)] * 4, max(2 * I, I + O - 1))
+    assert res.optimal_time == pytest.approx(pf, rel=1e-6)
+
+
+def test_schedule_satisfies_constraints():
+    """Replay the returned schedule and check the paper's constraints."""
+    M, C = 12, 8
+    res = solve_optimal_schedule([(4, 3), (6, 2)], M=M, C=C, cost_model=CM)
+    assert res.feasible
+    state = {i: [I, O, 0, 0] for i, (I, O) in enumerate([(4, 3), (6, 2)])}
+    for step in res.schedule:
+        total_c = 0
+        for idx, ((I, O, m, g), act) in enumerate(step):
+            cur = state[idx]
+            assert (cur[2], cur[3]) == (m, g)  # schedule matches replay
+            if act[0] == "evict":
+                cur[2] = 0
+            elif act[0] == "run":
+                c = act[1]
+                total_c += c
+                assert c <= (I + g) - m        # tokens-to-process (7)
+                cur[2] += c
+                if cur[2] == I + cur[3]:       # token generation (8)
+                    cur[3] += 1
+                    if cur[3] >= O:
+                        cur[2] = 0
+        assert total_c <= C                     # batch constraint (9)
+        assert sum(s[2] for s in state.values()) <= M
+    for (I, O, *_), s in zip([(4, 3), (6, 2)], state.values()):
+        assert s[3] == O                        # termination
+
+
+def test_existence_query():
+    spec = [(4, 4)] * 4
+    M = 8
+    vllm = sched_latency("vllm", spec, M)
+    assert exists_schedule_below(spec, M=M, C=4096, cost_model=CM,
+                                 bound=vllm * 1.001)
+    opt = solve_optimal_schedule(spec, M=M, C=4096, cost_model=CM)
+    assert not exists_schedule_below(spec, M=M, C=4096, cost_model=CM,
+                                     bound=opt.optimal_time * 0.999)
+
+
+def test_batch_time_bound_constraint():
+    """§7 objective variant: constrain per-batch time (TPOT-style SLO)."""
+    spec = [(64, 2)] * 2
+    free = solve_optimal_schedule(spec, M=1000, C=4096, cost_model=CM)
+    from repro.core.cost_model import BatchSpec
+    one_tok = CM.batch_time(BatchSpec(prefills=[(64, 0)]))
+    res = solve_optimal_schedule(spec, M=1000, C=4096, cost_model=CM,
+                                 batch_time_bound=one_tok * 1.01)
+    assert res.feasible
+    assert res.optimal_time >= free.optimal_time
+    assert res.num_batches >= free.num_batches

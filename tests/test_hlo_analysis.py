@@ -1,0 +1,69 @@
+"""HLO collective-byte parser: shapes, replica groups, while multipliers."""
+import textwrap
+
+from repro.launch.hlo_analysis import (collective_bytes, shape_bytes,
+                                       split_computations)
+
+HLO = textwrap.dedent("""\
+    HloModule test
+
+    %cond.1 (p: (s32[], f32[8])) -> pred[] {
+      %p = (s32[], f32[8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(24)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    %body.1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %p = (s32[], f32[8]) parameter(0)
+      %x = f32[8]{0} get-tuple-element(%p), index=1
+      %ar = f32[8]{0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%sum
+      %i = s32[] get-tuple-element(%p), index=0
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8]) tuple(%ip, %ar)
+    }
+
+    ENTRY %main (a: f32[8], b: bf16[4,128]) -> f32[8] {
+      %a = f32[8]{0} parameter(0)
+      %b = bf16[4,128]{1,0} parameter(1)
+      %ag = bf16[4,2048]{1,0} all-gather(%b), dimensions={1}, replica_groups=[16,16]<=[256], channel_id=2
+      %t0 = (s32[], f32[8]) tuple(%zero, %a)
+      %w = (s32[], f32[8]) while(%t0), condition=%cond.1, body=%body.1
+      ROOT %out = f32[8]{0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8]") == 32
+    assert shape_bytes("bf16[4,128]") == 1024
+    assert shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert shape_bytes("pred[]") == 1        # scalar: one element
+    assert shape_bytes("s32[10]") == 40
+
+
+def test_split_computations():
+    comps = split_computations(HLO)
+    assert "cond.1" in comps and "body.1" in comps and "main" in comps
+
+
+def test_collectives_with_while_multiplier():
+    stats = collective_bytes(HLO, num_devices=256)
+    # all-gather appears once at top level: bf16[4,2048] = 16384 B
+    assert stats.bytes_by_kind["all-gather"] == 16384
+    # all-reduce inside a 24-trip while: f32[8]=32 B * 24
+    assert stats.bytes_by_kind["all-reduce"] == 32 * 24
+    assert stats.count_by_kind["all-reduce"] == 24
+    # link bytes: AG (g-1)/g + AR 2(g-1)/g with g=16
+    expect = 16384 * 15 / 16 + 32 * 24 * 2 * 15 / 16
+    assert abs(stats.link_bytes - expect) < 1e-6
+
+
+def test_replica_group_list_form():
+    text = ("ENTRY %m (x: f32[4]) -> f32[4] {\n"
+            "  ROOT %ar = f32[4]{0} all-reduce(%x), "
+            "replica_groups={{0,1},{2,3}}, to_apply=%s\n}\n")
+    stats = collective_bytes(text, num_devices=4)
+    assert stats.bytes_by_kind["all-reduce"] == 16
+    assert abs(stats.link_bytes - 16 * 2 * 1 / 2) < 1e-6

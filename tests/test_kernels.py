@@ -1,0 +1,176 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode).
+
+Assignment §c: 'For each Pallas kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py pure-jnp oracle.'
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.paged_attention.ops import (decode_attention_dense,
+                                               paged_decode_attention)
+from repro.kernels.paged_attention.ref import paged_decode_reference
+from repro.kernels.rwkv_scan.ops import wkv6
+from repro.kernels.rwkv_scan.ref import wkv6_reference
+
+K = jax.random.PRNGKey
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (1, 128, 4, 4, 64),       # MHA
+    (2, 256, 8, 2, 64),       # GQA 4:1
+    (1, 128, 8, 1, 128),      # MQA
+    (2, 100, 4, 2, 64),       # ragged S (padding path)
+    (1, 512, 2, 2, 128),      # long
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, Hkv, D, dtype):
+    q = jax.random.normal(K(0), (B, S, H, D), dtype)
+    k = jax.random.normal(K(1), (B, S, Hkv, D), dtype)
+    v = jax.random.normal(K(2), (B, S, Hkv, D), dtype)
+    out = flash_attention(q, k, v)
+    ref = attention_reference(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_sliding_window(window):
+    B, S, H, Hkv, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(K(0), (B, S, H, D))
+    k = jax.random.normal(K(1), (B, S, Hkv, D))
+    v = jax.random.normal(K(2), (B, S, Hkv, D))
+    out = flash_attention(q, k, v, window=window)
+    ref = attention_reference(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_prefix_lm():
+    """PaliGemma-style bidirectional prefix."""
+    B, S, H, Hkv, D = 1, 128, 4, 4, 64
+    q = jax.random.normal(K(0), (B, S, H, D))
+    k = jax.random.normal(K(1), (B, S, Hkv, D))
+    v = jax.random.normal(K(2), (B, S, Hkv, D))
+    out = flash_attention(q, k, v, prefix_len=32)
+    ref = attention_reference(q, k, v, prefix_len=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 32), (128, 128)])
+def test_flash_attention_block_shapes(bq, bk):
+    B, S, H, Hkv, D = 1, 256, 2, 2, 64
+    q = jax.random.normal(K(3), (B, S, H, D))
+    k = jax.random.normal(K(4), (B, S, Hkv, D))
+    v = jax.random.normal(K(5), (B, S, Hkv, D))
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    ref = attention_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# paged decode attention
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("B,H,Hkv,D,page,npages", [
+    (2, 8, 2, 64, 16, 4),
+    (4, 4, 4, 64, 32, 2),
+    (1, 8, 1, 128, 64, 3),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_sweep(B, H, Hkv, D, page, npages, dtype):
+    P = B * npages + 3                      # spare pages in the pool
+    q = jax.random.normal(K(0), (B, H, D), dtype)
+    kp = jax.random.normal(K(1), (P, page, Hkv, D), dtype)
+    vp = jax.random.normal(K(2), (P, page, Hkv, D), dtype)
+    bt = jax.random.permutation(K(3), P)[:B * npages].reshape(B, npages)
+    bt = bt.astype(jnp.int32)
+    ctx = jax.random.randint(K(4), (B,), 1, page * npages + 1)
+    out = paged_decode_attention(q, kp, vp, bt, ctx)
+    ref = paged_decode_reference(q.astype(jnp.float32),
+                                 kp.astype(jnp.float32),
+                                 vp.astype(jnp.float32), bt, ctx)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_paged_decode_short_context_skips_pages():
+    """ctx=1: only the first page contributes (pl.when skip path)."""
+    B, H, Hkv, D, page, npages = 1, 4, 2, 64, 16, 4
+    P = B * npages
+    q = jax.random.normal(K(0), (B, H, D))
+    kp = jax.random.normal(K(1), (P, page, Hkv, D))
+    vp = jax.random.normal(K(2), (P, page, Hkv, D))
+    bt = jnp.arange(P).reshape(B, npages).astype(jnp.int32)
+    ctx = jnp.array([1], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, ctx)
+    ref = paged_decode_reference(q, kp, vp, bt, ctx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_dense_wrapper():
+    B, S, H, Hkv, D = 3, 128, 8, 4, 64
+    q = jax.random.normal(K(0), (B, H, D))
+    k = jax.random.normal(K(1), (B, S, Hkv, D))
+    v = jax.random.normal(K(2), (B, S, Hkv, D))
+    ctx = jnp.array([5, 64, 128], jnp.int32)
+    out = decode_attention_dense(q, k, v, ctx, page_size=32)
+    from repro.distributed.collectives import decode_attn_reference
+    ref = decode_attn_reference(q, k, v, ctx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# wkv6 chunked scan
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("B,S,H,D,chunk", [
+    (1, 64, 2, 32, 16),
+    (2, 128, 4, 32, 64),
+    (1, 96, 2, 64, 32),
+    (2, 64, 2, 32, 64),                    # single chunk
+])
+def test_wkv6_sweep(B, S, H, D, chunk):
+    r = jax.random.normal(K(0), (B, S, H, D)) * 0.3
+    k = jax.random.normal(K(1), (B, S, H, D)) * 0.3
+    v = jax.random.normal(K(2), (B, S, H, D)) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(K(3), (B, S, H, D))) * 0.5 + 0.45
+    u = jax.random.normal(K(4), (H, D)) * 0.1
+    y, s = wkv6(r, k, v, w, u, chunk=chunk)
+    yr, sr = wkv6_reference(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_wkv6_decay_extremes():
+    """w near 0 (full reset) and near 1 (full memory) stay stable."""
+    B, S, H, D = 1, 64, 2, 32
+    r = jax.random.normal(K(0), (B, S, H, D)) * 0.3
+    k = jax.random.normal(K(1), (B, S, H, D)) * 0.3
+    v = jax.random.normal(K(2), (B, S, H, D)) * 0.3
+    u = jnp.zeros((H, D))
+    for wval in (0.01, 0.999):
+        w = jnp.full((B, S, H, D), wval)
+        y, s = wkv6(r, k, v, w, u, chunk=16)
+        yr, sr = wkv6_reference(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,55 @@
+"""Paged allocator invariants — unit + stateful property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kvcache import OutOfPagesError, PagedAllocator
+
+
+def test_basic_alloc_free():
+    a = PagedAllocator(num_pages=8, page_size=4)
+    assert a.tokens_capacity() == 32
+    pages = a.allocate(0, 5)               # needs 2 pages
+    assert len(pages) == 2 and a.used_pages == 2
+    a.allocate(0, 3)                       # fits in slack (5+3=8=2 pages)
+    assert a.used_pages == 2
+    a.allocate(0, 1)                       # 9 tokens -> 3rd page
+    assert a.used_pages == 3
+    assert a.free(0) == 3
+    assert a.used_pages == 0
+
+
+def test_out_of_pages():
+    a = PagedAllocator(num_pages=2, page_size=4)
+    a.allocate(0, 8)
+    with pytest.raises(OutOfPagesError):
+        a.allocate(1, 1)
+    a.free(0)
+    a.allocate(1, 1)                       # fine after release
+
+
+def test_pages_never_shared():
+    a = PagedAllocator(num_pages=16, page_size=2)
+    p0 = a.allocate(0, 6)
+    p1 = a.allocate(1, 6)
+    assert not set(p0) & set(p1)
+    a.check_invariants()
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 5), st.integers(1, 9),
+                              st.booleans()), max_size=60))
+def test_property_no_leaks_no_double_alloc(ops):
+    """Random allocate/free interleavings keep the page set partitioned."""
+    a = PagedAllocator(num_pages=10, page_size=4)
+    for rid, tokens, do_free in ops:
+        if do_free:
+            a.free(rid)
+        else:
+            try:
+                a.allocate(rid, tokens)
+            except OutOfPagesError:
+                pass
+        a.check_invariants()
+    for rid in range(6):
+        a.free(rid)
+    assert a.free_pages == 10

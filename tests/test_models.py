@@ -1,0 +1,228 @@
+"""Per-arch smoke tests (REDUCED configs, assignment §f) + family
+parity properties: chunked-prefill == full-prefill, decode continuity,
+vocab-padding neutrality."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, applicable_shapes, get_config
+from repro.models import model as M
+
+RNG = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=32, rng=RNG):
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "patch":
+        batch["patch_embeds"] = jax.random.normal(
+            rng, (B, cfg.num_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_smoke_train_step(name):
+    """One forward/train step on CPU: correct shapes, no NaNs."""
+    cfg = get_config(name).reduced()
+    params = M.init_params(cfg, RNG)
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: M.train_loss(cfg, p, batch))(params)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_smoke_prefill_decode(name):
+    cfg = get_config(name).reduced()
+    params = M.init_params(cfg, RNG)
+    batch = make_batch(cfg)
+    cache_len = cfg.window if cfg.window else 64
+    logits, cache = M.prefill(cfg, params, batch, cache_len=cache_len)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    nxt = jnp.argmax(logits[:, :cfg.vocab_size], -1)
+    logits2, cache = M.decode_step(cfg, params, nxt, cache)
+    assert logits2.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+    assert int(cache["index"][0]) == batch["tokens"].shape[1] + (
+        cfg.num_patches if cfg.frontend == "patch" else 0) + 1
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "qwen3-4b",
+                                  "qwen2-moe-a2.7b", "hymba-1.5b",
+                                  "rwkv6-7b", "musicgen-medium",
+                                  "starcoder2-3b", "smollm-360m"])
+def test_chunked_prefill_parity(name):
+    """prefill_chunk over 3 chunks == one full prefill (fp32, exact-ish).
+    This is the correctness backbone of chunked prefill + refill."""
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32")
+    params = M.init_params(cfg, RNG)
+    B, S = 2, 48
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    Smax = cfg.window if cfg.window else 64
+    lf, cache_f = M.prefill(cfg, params, {"tokens": toks},
+                            cache_len=Smax, moe_impl="dense")
+    cache = M.init_cache(cfg, B, Smax)
+    for i in range(0, S, 16):
+        lc, cache = M.prefill_chunk(cfg, params, toks[:, i:i + 16], cache,
+                                    moe_impl="dense")
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lc),
+                               rtol=2e-4, atol=2e-4)
+    # decode parity from both caches
+    nxt = jnp.argmax(lf, -1)
+    d1, _ = M.decode_step(cfg, params, nxt, cache_f, moe_impl="dense")
+    d2, _ = M.decode_step(cfg, params, nxt, cache, moe_impl="dense")
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_uneven_chunk_sizes_parity():
+    """Arbitrary chunk splits (incl. size-1) stay consistent."""
+    cfg = dataclasses.replace(get_config("hymba-1.5b").reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, RNG)
+    toks = jax.random.randint(RNG, (1, 37), 0, cfg.vocab_size)
+    Smax = cfg.window
+    lf, _ = M.prefill(cfg, params, {"tokens": toks}, cache_len=Smax)
+    cache = M.init_cache(cfg, 1, Smax)
+    ofs = 0
+    for c in (1, 7, 16, 13):
+        lc, cache = M.prefill_chunk(cfg, params, toks[:, ofs:ofs + c], cache)
+        ofs += c
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lc),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_vocab_padding_never_wins():
+    """Padded-vocab logit rows exist but the loss masks them and real
+    generation ignores them (sampling slices :vocab_size)."""
+    cfg = dataclasses.replace(get_config("smollm-360m").reduced(),
+                              dtype="float32", vocab_size=250)  # pads to 256
+    params = M.init_params(cfg, RNG)
+    batch = make_batch(cfg)
+    assert cfg.padded_vocab > cfg.vocab_size
+    loss = M.train_loss(cfg, params, batch)
+    # perturbing padded-row weights must not change the loss
+    head_key = "embed" if cfg.tie_embeddings else "head"
+    p2 = dict(params)
+    p2[head_key] = p2[head_key].at[cfg.vocab_size:].add(7.0)
+    loss2 = M.train_loss(cfg, p2, batch)
+    np.testing.assert_allclose(float(loss), float(loss2), rtol=1e-6)
+
+
+def test_moe_padded_experts_get_zero_weight():
+    """qwen2-moe 60->64 padding: router never routes to pads."""
+    cfg = dataclasses.replace(get_config("qwen2-moe-a2.7b").reduced(),
+                              dtype="float32")
+    # reduced: num_experts=4 padded to 4; force real padding
+    cfg = dataclasses.replace(cfg, num_experts=3, expert_pad_multiple=4)
+    params = M.init_params(cfg, RNG)
+    batch = make_batch(cfg)
+    from repro.models import moe as moe_mod
+    lp = jax.tree.map(lambda x: x[0], params["layers"])  # layer 0
+    x = jax.random.normal(RNG, (2, 8, cfg.d_model))
+    y = moe_mod.apply_moe(lp["moe"], cfg, x)
+    # zero out padding experts' weights: output must be identical
+    moe_p = dict(lp["moe"])
+    for k in ("wi_gate", "wi_up", "wo"):
+        moe_p[k] = moe_p[k].at[cfg.num_experts:].set(1234.5)
+    y2 = moe_mod.apply_moe(moe_p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-5)
+
+
+def test_moe_sparse_matches_dense_without_overflow():
+    cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b").reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, RNG)
+    from repro.models import moe as moe_mod
+    lp = jax.tree.map(lambda x: x[0], params["layers"])
+    x = jax.random.normal(RNG, (1, 16, cfg.d_model)) * 0.5
+    yd = moe_mod.apply_moe(lp["moe"], cfg, x)
+    ys = moe_mod.apply_moe_sparse(lp["moe"], cfg, x, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(ys),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_restricts_attention():
+    """Tokens beyond the layered receptive field (L x window) cannot
+    influence the output (hymba's windowed-attention branch)."""
+    cfg = dataclasses.replace(get_config("hymba-1.5b").reduced(),
+                              dtype="float32", ssm_state=0, ssm_heads=0,
+                              family="dense")  # isolate windowed attention
+    params = M.init_params(cfg, RNG)
+    # receptive field grows by `window` per layer: need S > L*window
+    S = cfg.num_layers * cfg.window + 8
+    toks = jax.random.randint(RNG, (1, S), 0, cfg.vocab_size)
+    l1, _ = M.prefill(cfg, params, {"tokens": toks}, cache_len=cfg.window)
+    toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 1) % cfg.vocab_size)
+    l2, _ = M.prefill(cfg, params, {"tokens": toks2}, cache_len=cfg.window)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def test_long_500k_only_for_subquadratic():
+    for name in ASSIGNED_ARCHS:
+        cfg = get_config(name)
+        shapes = applicable_shapes(cfg)
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+
+
+@pytest.mark.parametrize("name", ["qwen3-4b", "hymba-1.5b", "rwkv6-7b",
+                                  "musicgen-medium"])
+def test_deferred_decode_matches_inline(name):
+    """decode_step_deferred (once-per-step cache scatter, §Perf cell A)
+    stays in exact lockstep with decode_step over several steps."""
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32")
+    params = M.init_params(cfg, RNG)
+    toks = jax.random.randint(RNG, (2, 40), 0, cfg.vocab_size)
+    Smax = cfg.window if cfg.window else 64
+    lg, cache = M.prefill(cfg, params, {"tokens": toks}, cache_len=Smax)
+    ci, cd = cache, dict(cache)
+    cur_i = cur_d = jnp.argmax(lg, -1)
+    for _ in range(4):
+        li, ci = M.decode_step(cfg, params, cur_i, ci)
+        ld, cd = M.decode_step_deferred(cfg, params, cur_d, cd)
+        np.testing.assert_allclose(np.asarray(li), np.asarray(ld),
+                                   rtol=2e-5, atol=2e-5)
+        cur_i, cur_d = jnp.argmax(li, -1), jnp.argmax(ld, -1)
+    for a, b in zip(jax.tree.leaves(ci), jax.tree.leaves(cd)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_jnp_decode_matches_reference():
+    cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, RNG)
+    toks = jax.random.randint(RNG, (2, 40), 0, cfg.vocab_size)
+    lg, cache = M.prefill(cfg, params, {"tokens": toks}, cache_len=64)
+    nxt = jnp.argmax(lg, -1)
+    d_ref, _ = M.decode_step(cfg, params, nxt, cache, impl="reference")
+    d_fl, _ = M.decode_step(cfg, params, nxt, cache, impl="flash_jnp")
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_fl),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_continuity_rwkv_state():
+    """RWKV decode continues the prefill state exactly (fp32)."""
+    cfg = dataclasses.replace(get_config("rwkv6-7b").reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, RNG)
+    toks = jax.random.randint(RNG, (1, 16), 0, cfg.vocab_size)
+    # full prefill of 17 tokens == prefill 16 + decode 1
+    t17 = jnp.concatenate([toks, toks[:, :1]], axis=1)
+    lf, _ = M.prefill(cfg, params, {"tokens": t17}, cache_len=32)
+    _, cache = M.prefill(cfg, params, {"tokens": toks}, cache_len=32)
+    ld, _ = M.decode_step(cfg, params, toks[:, 0], cache)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(ld),
+                               rtol=2e-4, atol=2e-4)

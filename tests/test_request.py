@@ -1,0 +1,112 @@
+"""Request FSM invariants (paper §3) — unit + hypothesis property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.request import Phase, Request
+
+
+def drive(r: Request, chunks):
+    """Apply a chunk/preempt script; returns tokens generated."""
+    gen = 0
+    t = 0.0
+    for c in chunks:
+        if c == "P":
+            r.preempt()
+            continue
+        if not r.running:
+            r.running = True
+        c = min(c, r.remaining_prefill)
+        if c <= 0:
+            continue
+        t += 1.0
+        gen += int(r.advance(c, t))
+        if r.finished:
+            break
+    return gen
+
+
+def test_basic_lifecycle():
+    r = Request(rid=0, input_len=4, output_len=3)
+    assert r.phase == Phase.WAITING
+    r.running = True
+    assert r.phase == Phase.PREFILL
+    assert not r.advance(3, 1.0)          # partial prefill
+    assert r.advance(1, 2.0)              # completes prefill -> token 1
+    assert r.phase == Phase.DECODE
+    assert r.advance(1, 3.0)              # token 2
+    assert r.advance(1, 4.0)              # token 3 -> finished
+    assert r.finished and r.phase == Phase.FINISHED
+    assert r.m == 0                        # memory released
+    assert r.latency() == 4.0
+    assert r.ttft() == 2.0
+    assert r.tpot() == 1.0
+
+
+def test_peak_kv_is_i_plus_o_minus_1():
+    r = Request(rid=0, input_len=5, output_len=4)
+    r.running = True
+    peak = 0
+    t = 0.0
+    while not r.finished:
+        c = r.remaining_prefill
+        t += 1
+        peak = max(peak, r.m + c)   # in-batch reservation (m after proc)
+        r.advance(c, t)
+    assert peak == r.peak_kv == 5 + 4 - 1
+
+
+def test_refill_after_preemption():
+    r = Request(rid=0, input_len=4, output_len=4)
+    r.running = True
+    r.advance(4, 1.0)                      # prefill -> 1 token (m=4)
+    r.advance(1, 2.0)                      # decode -> 2 tokens (m=5)
+    assert r.m == 5 and r.generated == 2
+    released = r.preempt()
+    assert released == 5 and r.m == 0 and not r.running
+    # refill must reprocess input + generated tokens
+    assert r.remaining_prefill == 4 + 2
+    r.running = True
+    assert r.phase == Phase.PREFILL        # refill is a prefill
+    r.advance(6, 3.0)                      # full refill -> token 3
+    assert r.generated == 3
+
+
+@settings(max_examples=200, deadline=None)
+@given(I=st.integers(1, 64), O=st.integers(1, 16),
+       script=st.lists(
+           st.one_of(st.integers(1, 32), st.just("P")), max_size=80))
+def test_property_token_conservation(I, O, script):
+    """However the request is chunked/preempted: it finishes iff it
+    generates exactly O tokens, each token emerges exactly when m reaches
+    I+generated, and m never exceeds I+O-1."""
+    r = Request(rid=0, input_len=I, output_len=O)
+    gen = 0
+    t = 0.0
+    for step in script + [I + O + 100] * (O + 2):  # ensure termination
+        if r.finished:
+            break
+        if step == "P":
+            r.preempt()
+            assert r.m == 0
+            continue
+        if not r.running:
+            r.running = True
+        c = min(step, r.remaining_prefill)
+        if c <= 0:
+            continue
+        t += 1.0
+        before_target = r.target_context
+        got = r.advance(c, t)
+        assert r.m <= I + O - 1 or r.finished
+        assert got == (r.m == 0 and r.finished or r.m == before_target)
+        gen += int(got)
+    assert r.finished
+    assert gen == O == r.generated
+    assert len(r.token_times) == O
+
+
+def test_over_processing_rejected():
+    r = Request(rid=0, input_len=4, output_len=2)
+    r.running = True
+    with pytest.raises(AssertionError):
+        r.advance(5, 1.0)

@@ -1,0 +1,184 @@
+"""Algorithm-1 semantics: memory safety, policy behaviour, preset taxonomy."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import select_victim
+from repro.core.request import Phase, Request
+from repro.core.scheduler import Scheduler, SchedulerConfig, make_scheduler
+
+
+def mk_requests(spec):
+    return [Request(rid=i, input_len=I, output_len=O, arrival=a)
+            for i, (I, O, a) in enumerate(spec)]
+
+
+def run_to_completion(sched, requests, max_batches=50_000):
+    for r in requests:
+        sched.add_request(r)
+    t = 0.0
+    mems = []
+    for _ in range(max_batches):
+        if not sched.has_work():
+            return mems
+        batch = sched.get_next_batch()
+        assert batch.items, "deadlock"
+        t += 1.0
+        # memory constraint: total held KVs after the batch <= M
+        for r, c in batch.items:
+            r.advance(c, t)
+            if r.finished:
+                sched.complete(r)
+        held = sum(r.m for r in sched.running)
+        mems.append(held)
+        assert held <= sched.cfg.M, (held, sched.cfg.M)
+    raise AssertionError("did not converge")
+
+
+def test_memory_never_exceeded_under_pressure():
+    sched = make_scheduler("vllm", M=40, S=128)
+    run_to_completion(sched, mk_requests([(8, 8, 0.0)] * 12))
+    assert sched.num_preemptions > 0  # pressure actually happened
+
+
+def test_pf_never_preempts():
+    sched = make_scheduler("vllm_pf", M=40, S=128)
+    run_to_completion(sched, mk_requests([(8, 8, 0.0)] * 12))
+    assert sched.num_preemptions == 0
+
+
+def test_orca_reserves_context():
+    sched = make_scheduler("orca", M=40, S=16)
+    # S=16 reservation => only 2 concurrent requests
+    reqs = mk_requests([(4, 4, 0.0)] * 6)
+    for r in reqs:
+        sched.add_request(r)
+    batch = sched.get_next_batch()
+    assert len(batch) == 2
+
+
+def test_chunked_prefill_respects_token_budget():
+    cfg = SchedulerConfig(M=10_000, C=16, S=4096, priority="decode_first",
+                          hybrid=True, chunked=True)
+    sched = Scheduler(cfg)
+    r = Request(rid=0, input_len=100, output_len=2)
+    sched.add_request(r)
+    batch = sched.get_next_batch()
+    assert batch.items[0][1] == 16          # cropped to C
+    assert batch.total_tokens <= 16
+
+
+def test_nonchunked_skips_oversized_prefill():
+    cfg = SchedulerConfig(M=10_000, C=16, S=4096, chunked=False)
+    sched = Scheduler(cfg)
+    sched.add_request(Request(rid=0, input_len=100, output_len=2))
+    sched.add_request(Request(rid=1, input_len=8, output_len=2))
+    batch = sched.get_next_batch()
+    assert [r.rid for r in batch.requests] == [1]
+
+
+def test_hybrid_batching_mixes_phases():
+    cfg = SchedulerConfig(M=1000, C=4096, S=4096, priority="decode_first",
+                          hybrid=True)
+    sched = Scheduler(cfg)
+    r0 = Request(rid=0, input_len=4, output_len=4)
+    sched.add_request(r0)
+    b = sched.get_next_batch()
+    r0.advance(4, 1.0)                      # r0 is now a decode
+    sched.add_request(Request(rid=1, input_len=4, output_len=2))
+    b = sched.get_next_batch()
+    phases = sorted(r.phase.value for r in b.requests)
+    assert phases == ["decode", "prefill"]
+
+
+def test_nonhybrid_single_phase():
+    cfg = SchedulerConfig(M=1000, C=4096, S=4096, priority="prefill_first",
+                          hybrid=False)
+    sched = Scheduler(cfg)
+    r0 = Request(rid=0, input_len=4, output_len=4)
+    sched.add_request(r0)
+    sched.get_next_batch()
+    r0.advance(4, 1.0)
+    sched.add_request(Request(rid=1, input_len=4, output_len=2))
+    b = sched.get_next_batch()
+    assert len({r.phase for r in b.requests}) == 1
+
+
+def test_srf_preempts_smallest_m():
+    """SRF keeps long (large-m) requests resident (paper §8)."""
+    cfg = SchedulerConfig(M=20, C=4096, S=4096, replacement="srf")
+    sched = Scheduler(cfg)
+    long_r = Request(rid=0, input_len=12, output_len=8)
+    short_r = Request(rid=1, input_len=4, output_len=8)
+    sched.add_request(long_r)
+    sched.add_request(short_r)
+    sched.get_next_batch()
+    long_r.advance(12, 1.0)
+    short_r.advance(4, 1.0)
+    # decodes grow; at some point M=20 forces a preemption
+    for t in range(2, 8):
+        b = sched.get_next_batch()
+        for r, c in b.items:
+            r.advance(c, float(t))
+        if sched.num_preemptions:
+            break
+    assert sched.num_preemptions >= 1
+    assert not long_r.running or long_r.m > 0      # long survived
+    assert short_r.preemptions >= 1                # short was the victim
+
+
+def test_nrf_preempts_newest():
+    cfg = SchedulerConfig(M=20, C=4096, S=4096, replacement="nrf")
+    sched = Scheduler(cfg)
+    old_r = Request(rid=0, input_len=4, output_len=10, arrival=0.0)
+    new_r = Request(rid=1, input_len=4, output_len=10, arrival=1.0)
+    sched.add_request(old_r)
+    sched.add_request(new_r)
+    sched.get_next_batch()
+    old_r.advance(4, 1.0)
+    new_r.advance(4, 1.0)
+    for t in range(2, 12):
+        b = sched.get_next_batch()
+        for r, c in b.items:
+            r.advance(c, float(t))
+        if sched.num_preemptions:
+            break
+    assert new_r.preemptions >= 1 and old_r.preemptions == 0
+
+
+def test_max_running_slot_cap():
+    cfg = SchedulerConfig(M=10_000, C=4096, S=4096, max_running=3)
+    sched = Scheduler(cfg)
+    for r in mk_requests([(4, 2, 0.0)] * 8):
+        sched.add_request(r)
+    batch = sched.get_next_batch()
+    assert len(batch) == 3
+
+
+def test_select_victim_policies():
+    rs = mk_requests([(4, 4, 0.0), (4, 4, 1.0), (4, 4, 2.0)])
+    rs[0].m, rs[1].m, rs[2].m = 10, 5, 7
+    assert select_victim("nrf", rs).rid == 2       # newest arrival
+    assert select_victim("srf", rs).rid == 1       # smallest m
+    assert select_victim("lrf", rs).rid == 0       # largest m
+    assert select_victim("pf", rs) is None
+    assert select_victim("nrf", []) is None
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    spec=st.lists(st.tuples(st.integers(1, 20), st.integers(1, 8),
+                            st.floats(0, 5)), min_size=1, max_size=20),
+    M=st.integers(16, 200),
+    name=st.sampled_from(["vllm", "sarathi", "vllm_hy", "sarathi_cs"]),
+    repl=st.sampled_from(["nrf", "srf", "lrf"]))
+def test_property_all_requests_complete_and_memory_safe(spec, M, name, repl):
+    """Any workload + scheduler + policy: terminates, conserves tokens,
+    never violates M (provided every request individually fits)."""
+    spec = [(I, O, a) for I, O, a in spec if I + O - 1 <= M]
+    if not spec:
+        return
+    sched = make_scheduler(name, M=M, S=256, replacement=repl)
+    reqs = mk_requests(spec)
+    run_to_completion(sched, reqs)
+    assert all(r.finished for r in reqs)
+    assert all(r.generated == r.output_len for r in reqs)

@@ -1,0 +1,110 @@
+"""Simulator (InferMax loop): termination, conservation, paper phenomena."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import TheoreticalCostModel, get_hardware
+from repro.core.simulator import fresh_requests, run_sim
+
+CFG = get_config("llama2-7b")
+CM = TheoreticalCostModel(CFG, get_hardware("a100"), flops_eff=0.6,
+                          bw_eff=0.75, attn_bw_eff=0.25)
+
+
+def offline(n, I, O):
+    return fresh_requests([(I, O, 0.0)] * n)
+
+
+def test_all_requests_finish_and_conserve_tokens():
+    reqs = offline(32, 16, 8)
+    res = run_sim("vllm", reqs, CM, M=1000)
+    assert all(r.finished for r in reqs)
+    total = sum(r.generated for r in reqs)
+    assert total == 32 * 8
+    assert res.latency > 0 and res.tps > 0
+
+
+def test_low_contention_no_preemption():
+    """App. A: W=32 triggers no evictions."""
+    res = run_sim("vllm", offline(32, 64, 32), CM, M=100_000)
+    assert res.num_preemptions == 0
+
+
+def test_preemption_helps_under_tight_memory():
+    """§5.7/Fig 12: at M=100, non-PF beats PF by ~2x (I small)."""
+    pf = run_sim("sarathi_pf", offline(256, 8, 32), CM, M=100)
+    npf = run_sim("sarathi", offline(256, 8, 32), CM, M=100)
+    assert npf.num_preemptions > 0
+    assert pf.latency / npf.latency > 1.4
+
+
+def test_preemption_hurts_with_ample_memory():
+    """§5.7/Fig 12: at M=10K the PF schedule is no worse."""
+    pf = run_sim("vllm_pf", offline(256, 8, 32), CM, M=10_000)
+    npf = run_sim("vllm", offline(256, 8, 32), CM, M=10_000)
+    assert pf.latency <= npf.latency * 1.02
+
+
+def test_pf_higher_ttft_lower_tpot():
+    """§5.6/Fig 11: PF trades (much) higher TTFT for lower TPOT."""
+    pf = run_sim("vllm_pf", offline(128, 8, 64), CM, M=2_000)
+    npf = run_sim("vllm", offline(128, 8, 64), CM, M=2_000)
+    assert pf.max_ttft > npf.max_ttft
+    assert pf.mean_tpot < npf.mean_tpot
+
+
+def test_effective_batch_size_approx_m_over_i_plus_o():
+    """§5.6 Remark: PF average batch size ~= M/(I+O)."""
+    I, O, M = 32, 96, 4_000
+    res = run_sim("vllm_pf", offline(256, I, O), CM, M=M)
+    expected = M / (I + O)
+    assert res.mean_batch_size == pytest.approx(expected, rel=0.35)
+
+
+def test_srf_no_regression_vs_nrf():
+    """§8: SRF never loses to NRF (and LRF is strictly worse)."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    spec = []
+    for i in range(128):
+        I = int(rng.choice([8, 16, 512, 1024]))
+        O = int(rng.choice([16, 256]))
+        spec.append((I, O, 0.0))
+    out = {}
+    for repl in ("nrf", "srf", "lrf"):
+        out[repl] = run_sim("vllm", fresh_requests(spec), CM, M=8_000,
+                            replacement=repl)
+    assert out["srf"].latency <= out["nrf"].latency * 1.01
+    assert out["lrf"].latency > out["srf"].latency
+
+
+def test_srf_fairness_preserved():
+    """§8/Fig 15: SRF still completes earlier-arrived requests first
+    (rank correlation between arrival and finish stays positive)."""
+    import numpy as np
+    rng = np.random.default_rng(1)
+    spec = [(int(rng.choice([8, 512])), 32, float(i) * 1e-4)
+            for i in range(64)]
+    reqs = fresh_requests(spec)
+    run_sim("vllm", reqs, CM, M=2_000, replacement="srf")
+    arrivals = np.array([r.arrival for r in reqs])
+    finishes = np.array([r.finish_time for r in reqs])
+    rho = np.corrcoef(np.argsort(np.argsort(arrivals)),
+                      np.argsort(np.argsort(finishes)))[0, 1]
+    assert rho > 0.3
+
+
+def test_online_arrivals_idle_gap():
+    reqs = fresh_requests([(8, 4, 0.0), (8, 4, 100.0)])
+    res = run_sim("vllm", reqs, CM, M=1000)
+    assert reqs[1].finish_time > 100.0
+    assert reqs[0].finish_time < 1.0
+
+
+def test_histogram_gate_reduces_preemptions():
+    """SRF+Hist defers long-output requests -> fewer preemptions."""
+    spec = [(8, 256, float(i)) for i in range(64)]
+    base = run_sim("vllm", fresh_requests(spec), CM, M=1_500,
+                   replacement="srf")
+    hist = run_sim("vllm", fresh_requests(spec), CM, M=1_500,
+                   replacement="srf", use_histogram=True)
+    assert hist.num_preemptions <= base.num_preemptions
