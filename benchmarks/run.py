@@ -2,9 +2,15 @@
 
 Each module prints its table, asserts the paper's qualitative claims,
 and persists JSON under experiments/bench/.
+
+``--smoke`` runs the same modules with tiny workload sizes (small W/n)
+so one offline command catches schedule/benchmark regressions in
+minutes; the qualitative assertions still run.  Positional arguments
+filter modules by substring (e.g. ``python -m benchmarks.run fig08``).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
@@ -18,39 +24,56 @@ from benchmarks import (appa_low_contention, appb_engine_validation,  # noqa: E4
                         fig12_vary_m, fig13_csp, fig14_srf,
                         five_minute_rule, roofline_table)
 
+# (name, module, smoke-mode kwargs).  Modules without a size knob are
+# already tiny/analytical and run unchanged in smoke mode.
 MODULES = [
-    ("Fig 4  cost-model linearity", fig04_cost_linearity),
-    ("Fig 5/6 roofline placement", fig06_roofline),
-    ("Fig 7  SLO pareto", fig07_slo_pareto),
-    ("Fig 8  recompute vs swap", fig08_recompute_vs_swap),
-    ("Fig 9  scheduler comparison (W=1024)", fig09_schedulers),
-    ("App A  low contention (W=32)", appa_low_contention),
-    ("Fig 11 preemption-free", fig11_preemption_free),
-    ("Fig 12 varying M", fig12_vary_m),
-    ("Fig 13 CSP optimal scheduling", fig13_csp),
-    ("Fig 14 SRF vs NRF", fig14_srf),
-    ("App B  engine-vs-sim validation", appb_engine_validation),
-    ("App C  heterogeneous ranking", appc_ranking),
-    ("$6     five-minute rule", five_minute_rule),
-    ("$Roofline table (dry-run artifacts)", roofline_table),
+    ("Fig 4  cost-model linearity", fig04_cost_linearity, {}),
+    ("Fig 5/6 roofline placement", fig06_roofline, {}),
+    ("Fig 7  SLO pareto", fig07_slo_pareto, {}),
+    ("Fig 8  recompute vs swap", fig08_recompute_vs_swap, {"smoke": True}),
+    ("Fig 9  scheduler comparison (W=1024)", fig09_schedulers, {"W": 128}),
+    ("App A  low contention (W=32)", appa_low_contention, {}),
+    ("Fig 11 preemption-free", fig11_preemption_free, {"W": 256}),
+    ("Fig 12 varying M", fig12_vary_m, {"W": 256}),
+    ("Fig 13 CSP optimal scheduling", fig13_csp, {}),
+    ("Fig 14 SRF vs NRF", fig14_srf, {"n": 128}),
+    ("App B  engine-vs-sim validation", appb_engine_validation, {}),
+    ("App C  heterogeneous ranking", appc_ranking, {"W": 96}),
+    ("$6     five-minute rule", five_minute_rule, {}),
+    ("$Roofline table (dry-run artifacts)", roofline_table, {}),
 ]
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload sizes (fast offline regression "
+                         "check)")
+    ap.add_argument("filters", nargs="*",
+                    help="only run modules whose name contains a filter")
+    args = ap.parse_args(argv)
+
     t0 = time.time()
     failures = []
-    for name, mod in MODULES:
+    ran = 0
+    for name, mod, smoke_kw in MODULES:
+        if args.filters and not any(f.lower() in name.lower()
+                                    or f.lower() in mod.__name__.lower()
+                                    for f in args.filters):
+            continue
+        ran += 1
         print(f"\n{'='*72}\n>> {name}\n{'='*72}")
         t = time.time()
         try:
-            mod.run()
+            mod.run(**(smoke_kw if args.smoke else {}))
             print(f"[ok] {name} ({time.time()-t:.1f}s)")
         except Exception:
             failures.append(name)
             traceback.print_exc()
             print(f"[FAIL] {name}")
     print(f"\n{'='*72}")
-    print(f"benchmarks: {len(MODULES)-len(failures)}/{len(MODULES)} passed "
+    mode = "smoke" if args.smoke else "full"
+    print(f"benchmarks ({mode}): {ran-len(failures)}/{ran} passed "
           f"in {time.time()-t0:.0f}s")
     if failures:
         print("failed:", ", ".join(failures))

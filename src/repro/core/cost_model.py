@@ -239,13 +239,33 @@ def op_costs(cfg: ModelConfig, hw: HardwareConfig,
 
 
 class CostModel:
-    """Interface: batch_time(spec) in seconds."""
+    """Interface: batch_time(spec) in seconds, plus the §5.4 preemption
+    cost hooks (recompute vs swap) that schedulers and simulators use to
+    price a victim's restoration path."""
 
     def batch_time(self, spec: BatchSpec) -> float:  # pragma: no cover
         raise NotImplementedError
 
     def op_times(self, spec: BatchSpec) -> Dict[str, float]:  # pragma: no cover
         raise NotImplementedError
+
+    # --- preemption-cost hooks (§5.4 / Fig. 8) ------------------------- #
+    def recompute_time(self, n_kvs: int) -> float:
+        """Full-refill recompute: one prefill of N tokens (§3 refill —
+        the cost a discard-preempted request pays on re-admission)."""
+        return self.batch_time(BatchSpec(prefills=[(n_kvs, 0)]))
+
+    def kv_projection_time(self, n_kvs: int) -> float:
+        """Activation-cached K/V-projection-only rebuild (Fig. 8's
+        'recompute' curve).  Models without an operator-level view cannot
+        price it separately; default to the realizable full refill."""
+        return self.recompute_time(n_kvs)
+
+    def swap_time(self, n_kvs: int) -> float:
+        """Host-link transfer time for N KVs (§5.4).  0.0 means 'not
+        modeled' — callers (e.g. ``preempt_mode="auto"``) treat that as
+        swap-cost-unknown and fall back to recompute."""
+        return 0.0
 
 
 class TheoreticalCostModel(CostModel):
@@ -300,11 +320,6 @@ class TheoreticalCostModel(CostModel):
             "collective_s": comm / self.hw.link_bw,
             "flops": fl, "bytes": rw, "comm_bytes": comm,
         }
-
-    def recompute_time(self, n_kvs: int) -> float:
-        """Full-refill recompute: one prefill of N tokens (§3 refill —
-        the cost a preempted request pays)."""
-        return self.batch_time(BatchSpec(prefills=[(n_kvs, 0)]))
 
     def kv_projection_time(self, n_kvs: int) -> float:
         """Activation-cached KV rebuild: only the K/V projections are

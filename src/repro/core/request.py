@@ -35,6 +35,13 @@ class Request:
     generated: int = 0
     running: bool = False
     preemptions: int = 0
+    # --- swap/suspend state (§5.4) ---
+    # A swap-preempted request keeps its KVs in HOST memory instead of
+    # discarding them: ``suspended_m`` KVs are held by the swap store and
+    # restored on re-admission, so no refill prefill is needed.
+    suspended: bool = False
+    suspended_m: int = 0
+    swaps: int = 0
     # --- metrics ---
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -49,8 +56,16 @@ class Request:
         return self.input_len + self.generated
 
     @property
+    def resident_kv(self) -> int:
+        """KVs this request will hold on-device once (re)admitted, before
+        processing: swapped-out KVs count — they are restored, not
+        recomputed — so schedulers reserve for them and drivers skip the
+        refill."""
+        return self.suspended_m if self.suspended else self.m
+
+    @property
     def remaining_prefill(self) -> int:
-        return max(0, self.target_context - self.m)
+        return max(0, self.target_context - self.resident_kv)
 
     @property
     def phase(self) -> Phase:
@@ -90,13 +105,47 @@ class Request:
             return True
         return False
 
-    def preempt(self) -> int:
-        """Evict all KVs; back to waiting. Returns tokens released."""
+    def preempt(self, mode: str = "recompute") -> int:
+        """Evict all device KVs; back to waiting. Returns tokens released.
+
+        ``mode="swap"`` marks the KVs as suspended to host memory (§5.4):
+        the driver must snapshot them before reusing the slot and restore
+        them via :meth:`resume` on re-admission.  ``mode="recompute"``
+        discards them (the §3 refill pays a full re-prefill).  A request
+        with no cached KVs has nothing to swap and falls back to discard.
+        """
+        assert mode in ("recompute", "swap"), mode
         released = self.m
+        if mode == "swap" and self.m > 0:
+            self.suspended = True
+            self.suspended_m = self.m
+            self.swaps += 1
+        else:
+            self.suspended = False
+            self.suspended_m = 0
         self.m = 0
         self.running = False
         self.preemptions += 1
         return released
+
+    def drop_suspended(self) -> None:
+        """The driver could not keep the snapshot (host store full): this
+        preemption falls back to discard-and-recompute — the request pays
+        the full §3 refill on re-admission after all."""
+        assert self.suspended, self.rid
+        self.suspended = False
+        self.suspended_m = 0
+        self.swaps -= 1
+
+    def resume(self) -> int:
+        """Swap-in: the driver restored ``suspended_m`` KVs to the device.
+        Returns the number of restored tokens."""
+        assert self.suspended, self.rid
+        restored = self.suspended_m
+        self.m = restored
+        self.suspended = False
+        self.suspended_m = 0
+        return restored
 
     # --- metrics helpers ------------------------------------------------ #
     def latency(self) -> Optional[float]:

@@ -17,7 +17,10 @@ both drive it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.cost_model import CostModel
 
 from repro.core.histogram import OutputLengthHistogram
 from repro.core.policies import group_requests, ranking_key, select_victim
@@ -43,6 +46,13 @@ class SchedulerConfig:
     # admission-preemption; keep it as an opt-in knob.
     admission_can_preempt: bool = False
     max_running: int = 0         # concurrent-request cap (engine slots)
+    # What happens to a victim's KVs (§5.4 recompute-vs-swap):
+    #   recompute — discard; re-admission pays a full refill prefill (§3)
+    #   swap      — suspend to host memory; re-admission restores them
+    #               over the host link (no refill)
+    #   auto      — per-victim Fig. 8 decision: swap iff the cost model's
+    #               swap_time(m) undercuts its cheapest recompute path
+    preempt_mode: str = "recompute"
 
 
 @dataclass
@@ -68,13 +78,20 @@ class Batch:
 class Scheduler:
     """Algorithm 1.  Owns the waiting/running queues."""
 
-    def __init__(self, cfg: SchedulerConfig):
+    def __init__(self, cfg: SchedulerConfig,
+                 cost_model: Optional["CostModel"] = None):
+        assert cfg.preempt_mode in ("recompute", "swap", "auto"), \
+            cfg.preempt_mode
         self.cfg = cfg
+        # prices the swap-vs-recompute decision for preempt_mode="auto";
+        # drivers (simulator / engine) inject theirs if unset
+        self.cost_model = cost_model
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.histogram = OutputLengthHistogram() if cfg.use_histogram else None
         # stats
         self.num_preemptions = 0
+        self.num_swaps = 0
         self.num_batches = 0
 
     # ------------------------------------------------------------------ #
@@ -86,11 +103,13 @@ class Scheduler:
 
     # --- memory accounting ------------------------------------------- #
     def _reservation(self, r: Request, c: int = 0) -> int:
-        """Tokens of KV cache this request holds after processing c more."""
+        """Tokens of KV cache this request holds after processing c more.
+        Uses ``resident_kv``: a suspended (swapped-out) candidate's host
+        KVs come back on-device at restore, so they must be reserved."""
         if self.cfg.reserve == "input":
-            return r.m + c
+            return r.resident_kv + c
         if self.cfg.reserve == "peak":
-            return max(r.peak_kv, r.m + c)
+            return max(r.peak_kv, r.resident_kv + c)
         if self.cfg.reserve == "context":
             return self.cfg.S
         raise ValueError(self.cfg.reserve)
@@ -200,7 +219,10 @@ class Scheduler:
         assert self.histogram is not None
         pred_o = self.histogram.predict(cand.input_len)
         cand.predicted_output = pred_o
-        demand = cand.input_len + pred_o - 1
+        # the candidate's demand is capped at S exactly like every running
+        # request's below — a long-input candidate can never demand more
+        # than one context window
+        demand = min(cand.input_len + pred_o - 1, self.cfg.S)
         for r in self.running:
             ro = (r.predicted_output if r.predicted_output is not None
                   else self.histogram.predict(r.input_len))
@@ -208,11 +230,33 @@ class Scheduler:
         return demand > self.cfg.M
 
     def _preempt(self, victim: Request) -> None:
-        victim.preempt()
+        mode = self._preempt_mode_for(victim)
+        victim.preempt(mode=mode)
         self.num_preemptions += 1
+        if victim.suspended:
+            self.num_swaps += 1
         if victim in self.running:
             self.running.remove(victim)
         self.waiting.append(victim)
+
+    def _preempt_mode_for(self, victim: Request) -> str:
+        """Fig. 8 crossover for ``preempt_mode="auto"``: swap the victim's
+        m KVs iff the host-link transfer undercuts the cheapest
+        recomputation path the cost model offers (K/V-projection rebuild
+        or full refill).  Without a cost model — or one that does not
+        price swaps — auto degrades to recompute."""
+        mode = self.cfg.preempt_mode
+        if mode != "auto":
+            return mode
+        cm = self.cost_model
+        n = victim.m
+        if cm is None or n <= 0:
+            return "recompute"
+        t_swap = cm.swap_time(n)
+        if t_swap <= 0.0:
+            return "recompute"
+        t_rec = min(cm.kv_projection_time(n), cm.recompute_time(n))
+        return "swap" if t_swap < t_rec else "recompute"
 
     # ------------------------------------------------------------------ #
     def complete(self, r: Request) -> None:
@@ -230,7 +274,9 @@ class Scheduler:
 def make_scheduler(name: str, M: int, *, S: int = 4096,
                    replacement: Optional[str] = None,
                    ranking: str = "arrival",
-                   use_histogram: bool = False) -> Scheduler:
+                   use_histogram: bool = False,
+                   preempt_mode: str = "recompute",
+                   cost_model: Optional["CostModel"] = None) -> Scheduler:
     name = name.lower()
     presets = {
         "vllm": dict(C=S, priority="prefill_first", hybrid=False, chunked=False),
@@ -253,5 +299,6 @@ def make_scheduler(name: str, M: int, *, S: int = 4096,
     if name.endswith("_pf"):
         reserve, repl = "peak", "pf"   # hypothetical *pf variants
     cfg = SchedulerConfig(M=M, S=S, reserve=reserve, replacement=repl,
-                          ranking=ranking, use_histogram=use_histogram, **kw)
-    return Scheduler(cfg)
+                          ranking=ranking, use_histogram=use_histogram,
+                          preempt_mode=preempt_mode, **kw)
+    return Scheduler(cfg, cost_model=cost_model)

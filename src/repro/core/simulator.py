@@ -25,6 +25,9 @@ class BatchLog:
     tokens: int
     kv_used: int
     preempted: int
+    swapped_out: int = 0        # victims suspended to host this batch
+    swapped_in: int = 0         # suspended requests restored this batch
+    swap_s: float = 0.0         # host-link time charged (in + out)
 
 
 @dataclass
@@ -32,6 +35,7 @@ class SimResult:
     requests: List[Request]
     batches: List[BatchLog] = field(default_factory=list)
     num_preemptions: int = 0
+    num_swaps: int = 0
 
     # --- aggregate metrics (§5.1) -------------------------------------- #
     @property
@@ -87,6 +91,7 @@ class SimResult:
             "mean_tpot": self.mean_tpot,
             "tps": self.tps,
             "preemptions": float(self.num_preemptions),
+            "swaps": float(self.num_swaps),
             "batches": float(len(self.batches)),
             "mean_batch_size": self.mean_batch_size,
             "mean_kv_used": self.mean_kv_used,
@@ -97,22 +102,33 @@ def _spec_of(batch: Batch) -> BatchSpec:
     spec = BatchSpec()
     for r, c in batch.items:
         # phase *before* processing: decode iff exactly one token to go
-        # and at least one token already generated
+        # and at least one token already generated.  resident_kv prices a
+        # swap-resumed request against its restored context, not m=0.
         if r.generated > 0 and r.remaining_prefill == c == 1:
-            spec.decodes.append((c, r.m))
+            spec.decodes.append((c, r.resident_kv))
         else:
-            spec.prefills.append((c, r.m))
+            spec.prefills.append((c, r.resident_kv))
     return spec
 
 
 def simulate(scheduler: Scheduler, requests: Sequence[Request],
              cost_model: CostModel, *, max_batches: int = 2_000_000,
              record_batches: bool = True) -> SimResult:
-    """Run the schedule to completion under virtual (cost-model) time."""
+    """Run the schedule to completion under virtual (cost-model) time.
+
+    Swap-preempted victims are charged ``cost_model.swap_time`` on the
+    way out and again on restore (§5.4), so simulated schedules price the
+    host link exactly like the serving engine's data plane does.
+    """
+    if scheduler.cost_model is None:
+        scheduler.cost_model = cost_model   # auto preempt-mode pricing
     pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
     now = 0.0
     result = SimResult(requests=list(requests))
     i = 0
+    # charges/counts from rounds whose batch admitted no items, owed to
+    # the next executed batch's log and clock
+    carry_swap_s, carry_out, carry_preempted = 0.0, 0, 0
 
     for _ in range(max_batches):
         # admit arrivals (paper Alg. 1 line 4: fetch new requests)
@@ -126,6 +142,14 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
             continue
 
         batch = scheduler.get_next_batch()
+        # host-link swap-out charges accrue even when the batch admits
+        # nothing (the victim's transfer happens regardless); they are
+        # carried into the next executed batch's virtual time
+        out_now = [v for v in batch.preempted if v.suspended]
+        carry_swap_s += sum(cost_model.swap_time(v.suspended_m)
+                            for v in out_now)
+        carry_out += len(out_now)
+        carry_preempted += len(batch.preempted)
         if not batch.items:
             if i < len(pending):              # blocked: wait for arrivals
                 now = max(now, pending[i].arrival)
@@ -136,8 +160,15 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
                 f"running={len(scheduler.running)})")
 
         spec = _spec_of(batch)
-        preempt_before = scheduler.num_preemptions
-        dt = cost_model.batch_time(spec)
+        # swap-in charges for suspended requests re-admitted here
+        swapped_in = [r for r, _ in batch.items if r.suspended]
+        swap_s = carry_swap_s + sum(cost_model.swap_time(r.suspended_m)
+                                    for r in swapped_in)
+        n_out, n_preempted = carry_out, carry_preempted
+        carry_swap_s, carry_out, carry_preempted = 0.0, 0, 0
+        for r in swapped_in:
+            r.resume()
+        dt = cost_model.batch_time(spec) + swap_s
         now += dt
         for r, c in batch.items:
             r.advance(c, now)
@@ -149,11 +180,14 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
                 t_start=now - dt, t_end=now,
                 num_prefill=len(spec.prefills), num_decode=len(spec.decodes),
                 tokens=spec.total_tokens, kv_used=kv_used,
-                preempted=scheduler.num_preemptions - preempt_before))
+                preempted=n_preempted,
+                swapped_out=n_out, swapped_in=len(swapped_in),
+                swap_s=swap_s))
     else:
         raise RuntimeError("simulation did not converge (max_batches hit)")
 
     result.num_preemptions = scheduler.num_preemptions
+    result.num_swaps = scheduler.num_swaps
     return result
 
 
@@ -164,11 +198,13 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
 def run_sim(scheduler_name: str, requests: Sequence[Request],
             cost_model: CostModel, *, M: int, S: int = 4096,
             replacement: Optional[str] = None, ranking: str = "arrival",
-            use_histogram: bool = False) -> SimResult:
+            use_histogram: bool = False,
+            preempt_mode: str = "recompute") -> SimResult:
     from repro.core.scheduler import make_scheduler
 
     sched = make_scheduler(scheduler_name, M, S=S, replacement=replacement,
-                           ranking=ranking, use_histogram=use_histogram)
+                           ranking=ranking, use_histogram=use_histogram,
+                           preempt_mode=preempt_mode, cost_model=cost_model)
     return simulate(sched, requests, cost_model)
 
 

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed.context import shard_map_compat
 from repro.models.common import Params, dense_init, gated_mlp, gated_mlp_init
 
 
@@ -164,7 +165,7 @@ def apply_moe_ep(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     # same replicated tokens — n x duplicate traffic (measured 16x on
     # cell B).  Decode steps (S=1) fall back to replicated dispatch.
     seq_spec = ep_axis if S % n == 0 else None
-    y = jax.shard_map(
+    y = shard_map_compat(
         local, mesh=mesh,
         in_specs=(P(dp, seq_spec, None), P(None, None),
                   P(ep_axis, None, None), P(ep_axis, None, None),

@@ -5,6 +5,11 @@ from repro.serving.engine import (  # noqa: F401
     EngineResult,
     generate_reference,
 )
+from repro.serving.swap_store import (  # noqa: F401
+    KVSwapStore,
+    SwapEntry,
+    SwapStoreFullError,
+)
 from repro.serving.serve_step import (  # noqa: F401
     build_decode_fn,
     build_prefill_fn,

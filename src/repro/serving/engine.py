@@ -4,23 +4,42 @@ path).
 
 The engine drives the unified ``Scheduler`` (Algorithm 1) against an
 actual model: chunked prefill via ``model.prefill_chunk`` per request,
-one *batched* decode step over all active slots per batch, preemption by
-freeing a request's slot (its KVs are discarded and later re-computed —
-the "refill" of §3).  Token-level memory accounting (the scheduler's M)
-is backed by a ``PagedAllocator``; the data plane stores each request in
-a contiguous cache slot (on TPU, dynamic-slice slots are the idiomatic
-layout — pointer-chasing page tables are a CUDA idiom; see DESIGN.md).
+one *batched* decode step over all active slots per batch.  Token-level
+memory accounting (the scheduler's M) is backed by a ``PagedAllocator``;
+the data plane stores each request in a contiguous cache slot (on TPU,
+dynamic-slice slots are the idiomatic layout — pointer-chasing page
+tables are a CUDA idiom; see DESIGN.md).
+
+Preemption supports BOTH §5.4 restoration paths, selected by
+``SchedulerConfig.preempt_mode``:
+
+* ``recompute`` — the victim's slot is freed and its KVs discarded; on
+  re-admission it pays a full refill prefill (the §3 refill).
+* ``swap`` — the victim's slot slice (every cache leaf, including the
+  position index and recurrent SSM state) is snapshotted to a host-side
+  ``KVSwapStore``; on re-admission the snapshot is written back into a
+  free slot and generation continues where it stopped —
+  ``Request.remaining_prefill`` sees the restored KVs, so no refill runs.
+  If the store's ``EngineConfig.swap_bytes`` capacity is exhausted the
+  victim falls back to discard-and-recompute for that preemption.
+* ``auto`` — per-victim Fig. 8 decision via the cost model
+  (``swap_time`` vs ``kv_projection_time``/``recompute_time``).
+
+Virtual time charges ``cost_model.swap_time`` for each swap-out and
+swap-in, mirroring the simulator, so simulated and engine schedules
+agree.  Measured wall times of the host transfers are tracked in
+``Engine.swap_stats`` (the fig08 validation column).
 
 Correctness contract (tested): scheduling, chunking, batching and
-preemption NEVER change the generated tokens — exactly the paper's
-"standard inference optimization techniques that do not affect inference
-outputs".
+preemption — under recompute, swap, AND auto — NEVER change the
+generated tokens, exactly the paper's "standard inference optimization
+techniques that do not affect inference outputs".
 """
 from __future__ import annotations
 
 import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -34,6 +53,7 @@ from repro.core.request import Request
 from repro.core.scheduler import Scheduler
 from repro.core.simulator import BatchLog, SimResult
 from repro.models import model as M
+from repro.serving.swap_store import KVSwapStore, SwapStoreFullError
 
 
 @dataclass
@@ -45,6 +65,9 @@ class EngineConfig:
     #                               matching the scheduler's M accounting)
     impl: str = "reference"       # attention backend
     moe_impl: str = "dense"       # chunk-invariant dispatch for parity
+    swap_bytes: Optional[int] = None   # host swap-store capacity (None =
+    #                                    unbounded); a full store makes the
+    #                                    victim fall back to recompute
     check_invariants: bool = True
 
 
@@ -55,8 +78,11 @@ def _slot_axis(leaf: jnp.ndarray) -> int:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, scheduler: Scheduler,
-                 ecfg: EngineConfig = EngineConfig(),
+                 ecfg: Optional[EngineConfig] = None,
                  cost_model: Optional[CostModel] = None):
+        # copy the config: a shared default (or caller-reused) instance
+        # must not be mutated by the per-model chunk clamp below
+        ecfg = replace(ecfg) if ecfg is not None else EngineConfig()
         if cfg.window:
             ecfg.chunk = min(ecfg.chunk, cfg.window)
         self.cfg = cfg
@@ -64,6 +90,8 @@ class Engine:
         self.params = params
         self.sched = scheduler
         self.cost_model = cost_model
+        if scheduler.cost_model is None:
+            scheduler.cost_model = cost_model   # auto preempt-mode pricing
         scheduler.cfg.max_running = ecfg.nslots
         # init_cache caps the per-slot KV length at cfg.window internally
         self.cache = M.init_cache(cfg, ecfg.nslots, ecfg.cache_len)
@@ -74,6 +102,15 @@ class Engine:
         self.slot_of: Dict[int, int] = {}
         self.token_ids: Dict[int, List[int]] = {}
         self.outputs: Dict[int, List[int]] = {}
+        self.swap_store = KVSwapStore(capacity_bytes=ecfg.swap_bytes)
+        # measured host-transfer wall times (fig08 validation column)
+        self.swap_stats: Dict[str, float] = dict(
+            swap_outs=0, swap_ins=0, kv_out=0, kv_in=0, swap_fallbacks=0,
+            wall_out_s=0.0, wall_in_s=0.0)
+        # swap-out virtual-time charges from rounds that admitted no
+        # items, owed to the next executed batch (mirrors the simulator)
+        self._carry_swap_s = 0.0
+        self._carry_out = 0
         self.now = 0.0
         self.wall = 0.0
         self.batch_logs: List[BatchLog] = []
@@ -122,6 +159,10 @@ class Engine:
         self._prefill_one = jax.jit(prefill_one)
         self._decode_all = jax.jit(decode_all)
         self._reset_slot = jax.jit(reset_slot)
+        # swap data plane: slot snapshot (device->host via device_get on
+        # the sliced result) and slot restore (host->device write)
+        self._slot_slice = jax.jit(slot_slice)
+        self._slot_write = jax.jit(slot_write)
 
     # ------------------------------------------------------------------ #
     def submit(self, r: Request) -> None:
@@ -136,10 +177,11 @@ class Engine:
         self.sched.add_request(r)
 
     # ------------------------------------------------------------------ #
-    def _claim_slot(self, rid: int) -> int:
+    def _claim_slot(self, rid: int, reset: bool = True) -> int:
         slot = self.free_slots.pop()
         self.slot_of[rid] = slot
-        self.cache = self._reset_slot(self.cache, slot)
+        if reset:
+            self.cache = self._reset_slot(self.cache, slot)
         return slot
 
     def _release(self, rid: int) -> None:
@@ -149,6 +191,53 @@ class Engine:
         self.allocator.free(rid)
         # refill restarts from scratch: drop generated tokens beyond prompt?
         # NO — generated tokens are kept and re-prefilled (paper §3 refill).
+
+    # --- §5.4 swap data plane ------------------------------------------ #
+    def _swap_out(self, victim: Request) -> bool:
+        """Snapshot the victim's slot to the host store, then free it.
+        Returns False when the store is full: the snapshot is dropped and
+        the victim falls back to discard-and-recompute (finite host
+        memory is the five-minute-rule's operating constraint)."""
+        t0 = time.perf_counter()
+        slot = self.slot_of[victim.rid]
+        snap = jax.device_get(self._slot_slice(self.cache, jnp.int32(slot)))
+        try:
+            self.swap_store.put(victim.rid, snap, self.token_ids[victim.rid],
+                                victim.suspended_m)
+        except SwapStoreFullError:
+            victim.drop_suspended()
+            self.sched.num_swaps -= 1   # the suspend did not stick
+            self.swap_stats["swap_fallbacks"] += 1
+            self._release(victim.rid)
+            return False
+        if self.ecfg.check_invariants:
+            assert int(np.asarray(snap["index"])[0]) == victim.suspended_m, \
+                (victim.rid, snap["index"], victim.suspended_m)
+        self.swap_stats["swap_outs"] += 1
+        self.swap_stats["kv_out"] += victim.suspended_m
+        self.swap_stats["wall_out_s"] += time.perf_counter() - t0
+        self._release(victim.rid)
+        return True
+
+    def _swap_in(self, r: Request) -> None:
+        """Restore r's snapshot into a free slot; no refill is needed."""
+        t0 = time.perf_counter()
+        entry = self.swap_store.pop(r.rid)
+        slot = self._claim_slot(r.rid, reset=False)  # fully overwritten
+        upd = jax.tree.map(jnp.asarray, entry.cache)
+        self.cache = self._slot_write(self.cache, upd, jnp.int32(slot))
+        jax.block_until_ready(self.cache["index"])
+        self.allocator.allocate(r.rid, entry.num_kv)
+        restored = r.resume()
+        if self.ecfg.check_invariants:
+            assert restored == entry.num_kv, (r.rid, restored, entry.num_kv)
+            assert self.token_ids[r.rid] == entry.tokens, r.rid
+        self.swap_stats["swap_ins"] += 1
+        self.swap_stats["kv_in"] += entry.num_kv
+        self.swap_stats["wall_in_s"] += time.perf_counter() - t0
+
+    def _swap_time(self, n_kvs: int) -> float:
+        return self.cost_model.swap_time(n_kvs) if self.cost_model else 0.0
 
     def _sample(self, logits: jnp.ndarray) -> int:
         """Greedy over the REAL vocabulary (padding logits excluded)."""
@@ -161,10 +250,34 @@ class Engine:
             return 0
         t0 = time.perf_counter()
         batch = self.sched.get_next_batch()
+        swap_s = 0.0
+        num_swap_out = num_swap_in = 0
         for victim in batch.preempted:
-            self._release(victim.rid)
+            if victim.suspended:
+                m = victim.suspended_m
+                if self._swap_out(victim):   # False: store full, fell back
+                    swap_s += self._swap_time(m)
+                    num_swap_out += 1
+            else:
+                self._release(victim.rid)
         if not batch.items:
+            # swap-outs still happened: owe their virtual-time charge to
+            # the next executed batch (mirrors the simulator's carry)
+            self._carry_swap_s += swap_s
+            self._carry_out += num_swap_out
+            self.wall += time.perf_counter() - t0
             return 0
+        swap_s += self._carry_swap_s
+        num_swap_out += self._carry_out
+        self._carry_swap_s, self._carry_out = 0.0, 0
+
+        # swap-ins: restore suspended re-admissions before classification
+        # so they re-enter as decodes/short prefills, not full refills
+        for r, _ in batch.items:
+            if r.suspended:
+                swap_s += self._swap_time(r.suspended_m)
+                num_swap_in += 1
+                self._swap_in(r)
 
         # classify + virtual-time the batch up front
         spec = BatchSpec()
@@ -177,7 +290,8 @@ class Engine:
             else:
                 prefill_items.append((r, c))
                 spec.prefills.append((c, r.m))
-        dt = self.cost_model.batch_time(spec) if self.cost_model else 0.0
+        dt = (self.cost_model.batch_time(spec) if self.cost_model else 0.0) \
+            + swap_s
         self.now += dt
 
         # ---- prefills (per request, chunked) --------------------------- #
@@ -234,13 +348,16 @@ class Engine:
         self.wall += time.perf_counter() - t0
         if self.ecfg.check_invariants:
             self.allocator.check_invariants()
+            self.swap_store.check_invariants()
             self._check_index_sync(batch)
         kv_used = sum(r.m for r in self.sched.running)
         self.batch_logs.append(BatchLog(
             t_start=self.now - dt, t_end=self.now,
             num_prefill=len(spec.prefills), num_decode=len(spec.decodes),
             tokens=spec.total_tokens, kv_used=kv_used,
-            preempted=len(batch.preempted)))
+            preempted=len(batch.preempted),
+            swapped_out=num_swap_out, swapped_in=num_swap_in,
+            swap_s=swap_s))
         return len(batch.items)
 
     def _check_index_sync(self, batch) -> None:
@@ -274,10 +391,15 @@ class Engine:
                     "engine deadlock: work remains but nothing schedulable")
         else:
             raise RuntimeError("engine did not converge")
+        if self.ecfg.check_invariants:
+            assert len(self.swap_store) == 0, \
+                f"swap store leaked rids {self.swap_store.suspended_rids}"
         sim = SimResult(requests=list(requests), batches=self.batch_logs,
-                        num_preemptions=self.sched.num_preemptions)
+                        num_preemptions=self.sched.num_preemptions,
+                        num_swaps=self.sched.num_swaps)
         return EngineResult(outputs=dict(self.outputs), metrics=sim,
-                            wall_time=self.wall)
+                            wall_time=self.wall,
+                            swap_stats=dict(self.swap_stats))
 
 
 @dataclass
@@ -285,6 +407,7 @@ class EngineResult:
     outputs: Dict[int, List[int]]
     metrics: SimResult
     wall_time: float
+    swap_stats: Dict[str, float] = field(default_factory=dict)
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,116 @@
+"""Host-side KV swap store — the §5.4 suspend/resume data plane.
+
+When the scheduler preempts a victim in ``swap`` mode, the engine
+snapshots the victim's per-slot cache slice (every cache leaf, including
+the position index and any recurrent SSM state) to HOST memory as NumPy
+arrays, together with the request's sampled token ids.  On re-admission
+the snapshot is written back into a (possibly different) free slot and
+generation continues — no refill prefill, bit-identical state.
+
+The store is pure bookkeeping: one entry per suspended rid, explicit
+byte accounting, and fail-fast invariants (double-put and missing-pop
+raise).  An optional ``capacity_bytes`` bound models finite host memory;
+exceeding it raises ``SwapStoreFullError`` so callers can fall back to
+discard-and-recompute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+class SwapStoreFullError(RuntimeError):
+    pass
+
+
+def _tree_nbytes(tree: Any) -> int:
+    if isinstance(tree, dict):
+        return sum(_tree_nbytes(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return sum(_tree_nbytes(v) for v in tree)
+    return int(np.asarray(tree).nbytes)
+
+
+@dataclass
+class SwapEntry:
+    rid: int
+    cache: Any                   # pytree of host (NumPy) arrays, one slot
+    tokens: List[int]            # prompt + sampled tokens at suspend time
+    num_kv: int                  # KV tokens held (Request.suspended_m)
+    nbytes: int = field(default=0)
+
+    def __post_init__(self) -> None:
+        if not self.nbytes:
+            self.nbytes = _tree_nbytes(self.cache)
+
+
+class KVSwapStore:
+    """rid -> suspended slot snapshot, with byte accounting."""
+
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        assert capacity_bytes is None or capacity_bytes > 0
+        self.capacity_bytes = capacity_bytes
+        self._entries: Dict[int, SwapEntry] = {}
+        self._nbytes = 0
+
+    # ------------------------------------------------------------------ #
+    def put(self, rid: int, cache: Any, tokens: List[int],
+            num_kv: int) -> SwapEntry:
+        """Suspend rid's slot snapshot.  One live entry per rid."""
+        if rid in self._entries:
+            raise ValueError(f"rid {rid} already suspended")
+        assert num_kv > 0, (rid, num_kv)
+        entry = SwapEntry(rid=rid, cache=cache, tokens=list(tokens),
+                          num_kv=num_kv)
+        if (self.capacity_bytes is not None
+                and self._nbytes + entry.nbytes > self.capacity_bytes):
+            raise SwapStoreFullError(
+                f"rid {rid}: {entry.nbytes}B over capacity "
+                f"({self._nbytes}/{self.capacity_bytes}B held)")
+        self._entries[rid] = entry
+        self._nbytes += entry.nbytes
+        return entry
+
+    def pop(self, rid: int) -> SwapEntry:
+        """Restore rid: removes and returns its snapshot."""
+        entry = self._entries.pop(rid, None)
+        if entry is None:
+            raise KeyError(f"rid {rid} not suspended")
+        self._nbytes -= entry.nbytes
+        return entry
+
+    def peek(self, rid: int) -> SwapEntry:
+        return self._entries[rid]
+
+    def discard(self, rid: int) -> bool:
+        """Drop a snapshot without restoring (request aborted)."""
+        entry = self._entries.pop(rid, None)
+        if entry is None:
+            return False
+        self._nbytes -= entry.nbytes
+        return True
+
+    # ------------------------------------------------------------------ #
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._entries
+
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    @property
+    def suspended_rids(self) -> List[int]:
+        return sorted(self._entries)
+
+    def check_invariants(self) -> None:
+        recount = sum(e.nbytes for e in self._entries.values())
+        assert recount == self._nbytes, (recount, self._nbytes)
+        if self.capacity_bytes is not None:
+            assert self._nbytes <= self.capacity_bytes
+        for rid, e in self._entries.items():
+            assert rid == e.rid and e.num_kv > 0, (rid, e.rid, e.num_kv)

@@ -1,0 +1,107 @@
+"""Offline fallback for ``hypothesis`` (given / settings / strategies).
+
+This repo's property tests are written against the hypothesis API, but the
+test environment has no network access and hypothesis may not be
+installed.  When the real package is available we re-export it verbatim;
+otherwise a tiny deterministic sampler stands in: each ``@given`` test is
+run ``max_examples`` times over pseudo-random examples drawn from a
+per-test seeded ``random.Random`` (seed = CRC32 of the test name), so the
+examples are stable across runs and machines.
+
+The fallback intentionally implements ONLY what this suite uses:
+``integers, floats, booleans, just, one_of, lists, tuples, sampled_from``
+and keyword-style ``@given(...)`` under an optional ``@settings(...)``.
+No shrinking, no example database — failures print the generated kwargs
+so they can be reproduced by hand.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def just(value) -> _Strategy:
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def one_of(*strats: _Strategy) -> _Strategy:
+            return _Strategy(
+                lambda rng: strats[rng.randrange(len(strats))].example(rng))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strats: _Strategy) -> _Strategy:
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strats))
+
+    strategies = _Strategies()
+
+    def settings(max_examples: int = 100, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_settings = {"max_examples": max_examples}
+            return fn
+        return deco
+
+    def given(**strat_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args):
+                opts = getattr(wrapper, "_compat_settings", None) \
+                    or getattr(fn, "_compat_settings", {})
+                n = opts.get("max_examples", 100)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for i in range(n):
+                    kwargs = {k: s.example(rng)
+                              for k, s in strat_kwargs.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except Exception:
+                        print(f"falsifying example #{i} for "
+                              f"{fn.__name__}: {kwargs!r}")
+                        raise
+            # pytest must not see the strategy kwargs as fixtures
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+st = strategies

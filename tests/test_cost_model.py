@@ -1,7 +1,7 @@
 """Cost models (paper §4): Eq. 1-3 values, monotonicity, linear fit."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.cost_model import (BatchSpec, LinearCostModel,

@@ -1,6 +1,6 @@
 """Paged allocator invariants — unit + stateful property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.kvcache import OutOfPagesError, PagedAllocator
 

@@ -1,6 +1,6 @@
 """Request FSM invariants (paper §3) — unit + hypothesis property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.request import Phase, Request
 

@@ -1,6 +1,6 @@
 """Algorithm-1 semantics: memory safety, policy behaviour, preset taxonomy."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.policies import select_victim
 from repro.core.request import Phase, Request

@@ -108,3 +108,36 @@ def test_histogram_gate_reduces_preemptions():
     hist = run_sim("vllm", fresh_requests(spec), CM, M=1_500,
                    replacement="srf", use_histogram=True)
     assert hist.num_preemptions <= base.num_preemptions
+
+
+# --- §5.4 swap-aware simulation -------------------------------------- #
+
+def test_sim_swap_charges_host_link_and_skips_refill():
+    """Swap mode restores suspended KVs instead of re-prefilling: the
+    simulator must count swaps, charge swap_time in virtual time, and
+    still finish every request."""
+    reqs_r = offline(256, 8, 32)
+    reqs_s = offline(256, 8, 32)
+    rec = run_sim("vllm", reqs_r, CM, M=300)
+    swp = run_sim("vllm", reqs_s, CM, M=300, preempt_mode="swap")
+    assert rec.num_preemptions > 0 and rec.num_swaps == 0
+    assert swp.num_swaps > 0
+    assert all(r.finished for r in reqs_s)
+    charged = sum(b.swap_s for b in swp.batches)
+    ins = sum(b.swapped_in for b in swp.batches)
+    outs = sum(b.swapped_out for b in swp.batches)
+    assert charged > 0.0 and ins == outs > 0
+    # A100 host link is fast vs recomputing the whole context: restoring
+    # beats refilling, so the swap schedule cannot be slower by much
+    assert swp.latency <= rec.latency * 1.05
+
+
+def test_sim_auto_matches_best_fixed_mode():
+    """'auto' picks per-victim via the cost model; it should never lose
+    to BOTH fixed policies on the same workload."""
+    lat = {}
+    for mode in ("recompute", "swap", "auto"):
+        reqs = offline(256, 8, 32)
+        lat[mode] = run_sim("vllm", reqs, CM, M=300,
+                            preempt_mode=mode).latency
+    assert lat["auto"] <= max(lat["recompute"], lat["swap"]) * (1 + 1e-9)

@@ -1,0 +1,91 @@
+"""KVSwapStore invariants (§5.4 suspend/resume bookkeeping): exact
+snapshot round-trips, byte accounting, capacity bounds, no leaks."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving.swap_store import (KVSwapStore, SwapEntry,
+                                      SwapStoreFullError)
+
+
+def snapshot(num_kv: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "k": rng.standard_normal((2, 1, num_kv, 4)).astype(np.float32),
+        "v": rng.standard_normal((2, 1, num_kv, 4)).astype(np.float32),
+        "index": np.asarray([num_kv], np.int32),
+    }
+
+
+def test_put_pop_roundtrip_exact():
+    store = KVSwapStore()
+    snap = snapshot(5, seed=1)
+    tokens = [3, 1, 4, 1, 5]
+    store.put(7, snap, tokens, 5)
+    assert 7 in store and len(store) == 1
+    entry = store.pop(7)
+    assert entry.rid == 7 and entry.num_kv == 5
+    assert entry.tokens == tokens
+    for key in snap:
+        assert np.array_equal(entry.cache[key], snap[key]), key
+    assert 7 not in store and len(store) == 0 and store.nbytes == 0
+
+
+def test_tokens_are_copied_at_put():
+    store = KVSwapStore()
+    tokens = [1, 2, 3]
+    store.put(0, snapshot(3), tokens, 3)
+    tokens.append(99)              # caller keeps sampling after suspend
+    assert store.pop(0).tokens == [1, 2, 3]
+
+
+def test_double_put_and_missing_pop_raise():
+    store = KVSwapStore()
+    store.put(1, snapshot(2), [0, 0], 2)
+    with pytest.raises(ValueError):
+        store.put(1, snapshot(2), [0, 0], 2)
+    with pytest.raises(KeyError):
+        store.pop(42)
+    store.check_invariants()
+
+
+def test_capacity_bound_enforced():
+    one = SwapEntry(rid=0, cache=snapshot(4), tokens=[0] * 4, num_kv=4)
+    store = KVSwapStore(capacity_bytes=one.nbytes)
+    store.put(0, snapshot(4), [0] * 4, 4)
+    with pytest.raises(SwapStoreFullError):
+        store.put(1, snapshot(4), [0] * 4, 4)
+    # the failed put must not corrupt accounting
+    store.check_invariants()
+    assert store.suspended_rids == [0]
+    store.pop(0)
+    store.put(1, snapshot(4), [0] * 4, 4)   # space freed -> fits again
+    store.check_invariants()
+
+
+def test_discard_drops_without_restore():
+    store = KVSwapStore()
+    store.put(3, snapshot(2), [0, 0], 2)
+    assert store.discard(3) is True
+    assert store.discard(3) is False
+    assert len(store) == 0 and store.nbytes == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(st.booleans(), st.integers(0, 7),
+                              st.integers(1, 9)),
+                    min_size=1, max_size=40))
+def test_random_put_pop_sequences_never_leak(ops):
+    store = KVSwapStore()
+    live = {}
+    for is_put, rid, num_kv in ops:
+        if is_put and rid not in live:
+            store.put(rid, snapshot(num_kv, seed=rid), [0] * num_kv, num_kv)
+            live[rid] = num_kv
+        elif not is_put and rid in live:
+            assert store.pop(rid).num_kv == live.pop(rid)
+        store.check_invariants()
+    assert store.suspended_rids == sorted(live)
+    for rid in sorted(live):
+        store.pop(rid)
+    assert len(store) == 0 and store.nbytes == 0
