@@ -1,0 +1,11 @@
+.PHONY: check test smoke
+
+# one offline regression command: tier-1 tests + smoke benchmarks
+check:
+	sh scripts/check.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+smoke:
+	python -m benchmarks.run --smoke

@@ -77,8 +77,13 @@ def engine_validation(n_requests: int = 8) -> dict:
         rs = np.random.RandomState(0)      # identical workload per mode
         sched = make_scheduler("vllm", 60, S=128, replacement="srf",
                                preempt_mode=mode)
+        # async_swap=False: this column validates the MEASURED host
+        # transfer against the analytical swap_time — the async plane
+        # would overlap (hide) the D2H copy and report dispatch+drain
+        # residue instead of the transfer itself
         eng = Engine(cfg, params, sched,
-                     EngineConfig(nslots=4, cache_len=64, chunk=16),
+                     EngineConfig(nslots=4, cache_len=64, chunk=16,
+                                  async_swap=False),
                      cost_model=cm)
         results[mode] = eng.run(workload())
 

@@ -21,7 +21,7 @@ from benchmarks import (appa_low_contention, appb_engine_validation,  # noqa: E4
                         appc_ranking, fig04_cost_linearity, fig06_roofline,
                         fig07_slo_pareto, fig08_recompute_vs_swap,
                         fig09_schedulers, fig11_preemption_free,
-                        fig12_vary_m, fig13_csp, fig14_srf,
+                        fig12_vary_m, fig13_csp, fig14_srf, fig_engine_wall,
                         five_minute_rule, roofline_table)
 
 # (name, module, smoke-mode kwargs).  Modules without a size knob are
@@ -38,6 +38,7 @@ MODULES = [
     ("Fig 13 CSP optimal scheduling", fig13_csp, {}),
     ("Fig 14 SRF vs NRF", fig14_srf, {"n": 128}),
     ("App B  engine-vs-sim validation", appb_engine_validation, {}),
+    ("$Perf  engine wall-time planes", fig_engine_wall, {"smoke": True}),
     ("App C  heterogeneous ranking", appc_ranking, {"W": 96}),
     ("$6     five-minute rule", five_minute_rule, {}),
     ("$Roofline table (dry-run artifacts)", roofline_table, {}),

@@ -1,0 +1,13 @@
+#!/usr/bin/env sh
+# Single offline regression entry point (also: `make check`):
+#   1. tier-1 pytest suite
+#   2. every figure benchmark at smoke sizes (includes fig_engine_wall)
+# Extra arguments are forwarded to pytest (e.g. scripts/check.sh -k engine).
+set -e
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 tests =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+echo "== smoke benchmarks =="
+python -m benchmarks.run --smoke

@@ -28,6 +28,9 @@ class BatchLog:
     swapped_out: int = 0        # victims suspended to host this batch
     swapped_in: int = 0         # suspended requests restored this batch
     swap_s: float = 0.0         # host-link time charged (in + out)
+    wall_s: float = 0.0         # measured wall time (engine only; the
+    #                             simulator advances virtual time and
+    #                             leaves this 0)
 
 
 @dataclass

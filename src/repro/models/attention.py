@@ -169,17 +169,30 @@ def attention_full(params: Params, cfg: ModelConfig, x: jnp.ndarray,
 
 def attention_chunk(params: Params, cfg: ModelConfig, x: jnp.ndarray,
                     cache: Dict, start: jnp.ndarray, *,
-                    impl: str = "reference") -> Tuple[jnp.ndarray, Dict]:
+                    impl: str = "reference",
+                    length: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, Dict]:
     """Chunked prefill against an existing cache (engine path).
 
     x: (B, c, d) — the next c prompt tokens of each request, whose first
     absolute position is ``start[b]``; cache[k|v]: (B, Smax, Hkv, D) holds
     the first ``start[b]`` KVs (ring order when cfg.window, in which case
     c <= window is required so no in-chunk slot collision can occur).
+
+    ``length`` (B,) marks only the first ``length[b]`` tokens of row b as
+    real: the trailing tokens are shape padding (bucketed chunks, one
+    compiled signature per bucket) whose KVs are routed to an
+    out-of-bounds slot and dropped, so the cache after the call is
+    bit-equal to an unpadded call of ``length[b]`` tokens.  Padded
+    *queries* produce garbage rows the caller must ignore; padded *keys*
+    never influence valid queries (their positions exceed every valid
+    query position, and the causal mask excludes them).
     """
     B, c, _ = x.shape
     Smax = cache["k"].shape[1]
     positions = start[:, None] + jnp.arange(c)[None, :]        # (B, c)
+    valid = (None if length is None
+             else jnp.arange(c)[None, :] < length[:, None])    # (B, c)
     q, k, v = _project_qkv(params, cfg, x, positions)
 
     qpos = positions[:, :, None]                               # (B, c, 1)
@@ -205,12 +218,14 @@ def attention_chunk(params: Params, cfg: ModelConfig, x: jnp.ndarray,
             [mask_old, jnp.broadcast_to(mask_new, (B, c, c))], axis=2)
         out = _sdpa(q, keys, vals, mask)
         slots = jnp.mod(positions, Smax)
-        new_k = cache["k"].at[rows, slots].set(k)
-        new_v = cache["v"].at[rows, slots].set(v)
     else:
         slots = jnp.minimum(positions, Smax - 1)
-        new_k = cache["k"].at[rows, slots].set(k)
-        new_v = cache["v"].at[rows, slots].set(v)
+    if valid is not None:
+        # padded-token writes go out of bounds and are dropped
+        slots = jnp.where(valid, slots, Smax)
+    new_k = cache["k"].at[rows, slots].set(k, mode="drop")
+    new_v = cache["v"].at[rows, slots].set(v, mode="drop")
+    if not cfg.window:
         mask = sidx <= qpos                                    # causal
         out = _sdpa(q, new_k, new_v, mask)
     out = out.reshape(B, c, cfg.q_dim) @ params["wo"]

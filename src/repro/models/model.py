@@ -131,26 +131,32 @@ def _block_full(cfg: ModelConfig, lp: Params, x: jnp.ndarray,
 
 def _block_chunk(cfg: ModelConfig, lp: Params, x: jnp.ndarray,
                  layer_cache: Dict, start: jnp.ndarray, impl: str,
-                 moe_impl: str) -> Tuple[jnp.ndarray, Dict]:
+                 moe_impl: str,
+                 length: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Dict]:
     """Chunked-prefill block: continue from an existing per-layer cache.
     x: (B, c, d); start: (B,) absolute position of the chunk's first token.
+    ``length`` (B,) marks the real (non-padding) prefix of each row —
+    padded steps must leave the cache/recurrent state untouched.
     """
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     if cfg.family == "ssm":
         st = {"S": layer_cache["S"], "x_tm": layer_cache["x_tm"],
               "x_cm": layer_cache["x_cm"]}
-        y, st = rwkv_mod.rwkv_time_mix_full(lp, cfg, h, st)
+        y, st = rwkv_mod.rwkv_time_mix_full(lp, cfg, h, st, length=length)
         x = x + y
         h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
-        cm, x_cm = rwkv_mod.rwkv_channel_mix(lp, cfg, h2, st["x_cm"])
+        cm, x_cm = rwkv_mod.rwkv_channel_mix(lp, cfg, h2, st["x_cm"],
+                                             length=length)
         x = x + cm
         st["x_cm"] = x_cm
         return x, st
     if cfg.family == "hybrid":
         kv = {"k": layer_cache["k"], "v": layer_cache["v"]}
-        a, kv = attn.attention_chunk(lp["attn"], cfg, h, kv, start, impl=impl)
+        a, kv = attn.attention_chunk(lp["attn"], cfg, h, kv, start, impl=impl,
+                                     length=length)
         sst = {"h": layer_cache["h"], "conv": layer_cache["conv"]}
-        s, sst = ssm_mod.apply_ssm_full(lp["ssm"], cfg, h, state=sst)
+        s, sst = ssm_mod.apply_ssm_full(lp["ssm"], cfg, h, state=sst,
+                                        length=length)
         y = 0.5 * (rms_norm(a, lp["ln_attn"], cfg.norm_eps)
                    + rms_norm(s, lp["ln_ssm"], cfg.norm_eps))
         x = x + y
@@ -158,7 +164,8 @@ def _block_chunk(cfg: ModelConfig, lp: Params, x: jnp.ndarray,
                      "conv": sst["conv"]}
     else:
         kv = {"k": layer_cache["k"], "v": layer_cache["v"]}
-        a, kv = attn.attention_chunk(lp["attn"], cfg, h, kv, start, impl=impl)
+        a, kv = attn.attention_chunk(lp["attn"], cfg, h, kv, start, impl=impl,
+                                     length=length)
         x = x + a
         new_cache = {"k": kv["k"], "v": kv["v"]}
     h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
@@ -402,14 +409,22 @@ def decode_step_deferred(cfg: ModelConfig, params: Params,
 
 def prefill_chunk(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
                   cache: Dict[str, Any], *, impl: str = "reference",
-                  moe_impl: str = "sparse",
-                  unroll: bool = False) -> Tuple[jnp.ndarray, Dict]:
+                  moe_impl: str = "sparse", unroll: bool = False,
+                  length: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict]:
     """Process the next c prompt tokens of each request against an
     existing cache (chunked prefill, paper §3 'chunked prefill').
 
     tokens: (B, c); cache["index"]: (B,) tokens already cached (= the
     absolute position of tokens[:, 0]).  Returns (last-token logits
     (B, V), updated cache with index += c).
+
+    ``length`` (B,) enables SHAPE-STABLE bucketed chunks: only the first
+    ``length[b]`` tokens of row b are real, the rest are padding.  The
+    logits row is the *last valid* token's, ``index`` advances by
+    ``length``, and every cache/state leaf is bit-equal to an unpadded
+    call — one compiled signature serves all chunk sizes up to c.
+    Rows with length 0 are inert (logits garbage, state untouched).
     """
     B, c = tokens.shape
     start = cache["index"]
@@ -420,15 +435,23 @@ def prefill_chunk(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
 
     def body(xc, per_layer):
         lp, lc = per_layer
-        xc, new_lc = _block_chunk(cfg, lp, xc, lc, start, impl, moe_impl)
+        xc, new_lc = _block_chunk(cfg, lp, xc, lc, start, impl, moe_impl,
+                                  length=length)
         return xc, new_lc
 
     x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_caches),
                                  unroll=unroll)
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
-    logits = _logits(cfg, params, x[:, -1])
+    if length is None:
+        x_last = x[:, -1]
+        advance = c
+    else:
+        last = jnp.maximum(length - 1, 0)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        advance = length
+    logits = _logits(cfg, params, x_last)
     out = dict(new_caches)
-    out["index"] = start + c
+    out["index"] = start + advance
     return logits, out
 
 

@@ -100,13 +100,23 @@ def _out_norm(params, cfg, y, g, dtype):
 
 
 def rwkv_time_mix_full(params: Params, cfg: ModelConfig, x: jnp.ndarray,
-                       state: Dict, chunk: int = 64) -> Tuple[jnp.ndarray, Dict]:
+                       state: Dict, chunk: int = 64,
+                       length=None) -> Tuple[jnp.ndarray, Dict]:
+    """``length`` (B,) marks only the first ``length[b]`` steps of row b
+    as real.  Padded steps are forced to the recurrence identity
+    (w = 1, k = 0, so S_t = S_{t-1}) and the carried token-shift sample
+    is the last *valid* token, making the final state bit-equal to an
+    unpadded run (length 0 = untouched row)."""
     B, S, d = x.shape
     H, D = cfg.ssm_heads, cfg.ssm_state
     from repro.models.ssm import pick_chunk
     Q = pick_chunk(S, chunk)
     shifted = _token_shift(x, state["x_tm"])
     r, k, v, w, g = _rkvwg(params, cfg, x, shifted)
+    if length is not None:
+        valid = (jnp.arange(S)[None, :] < length[:, None])[..., None, None]
+        w = jnp.where(valid, w, 1.0)
+        k = jnp.where(valid, k, jnp.zeros_like(k))
     u = jnp.exp(params["bonus"]).reshape(H, D)
 
     nc = S // Q
@@ -138,7 +148,18 @@ def rwkv_time_mix_full(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     S_last, y = jax.lax.scan(chunk_step, state["S"], (r_c, k_c, v_c, w_c))
     y = y.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)      # back to (B,S,H,D)
     out = _out_norm(params, cfg, y, g, x.dtype)
-    return out, {"S": S_last, "x_tm": x[:, -1:], "x_cm": state["x_cm"]}
+    x_tm = _last_valid(x, length, state["x_tm"])
+    return out, {"S": S_last, "x_tm": x_tm, "x_cm": state["x_cm"]}
+
+
+def _last_valid(x: jnp.ndarray, length, fallback: jnp.ndarray) -> jnp.ndarray:
+    """Token-shift carry: last valid token of x (B,S,d), or ``fallback``
+    (B,1,d) for rows with length 0.  length None = whole row valid."""
+    if length is None:
+        return x[:, -1:]
+    last = jnp.maximum(length - 1, 0)
+    picked = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    return jnp.where((length > 0)[:, None, None], picked, fallback)
 
 
 def rwkv_time_mix_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray,
@@ -159,12 +180,14 @@ def rwkv_time_mix_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray,
 
 
 def rwkv_channel_mix(params: Params, cfg: ModelConfig, x: jnp.ndarray,
-                     prev: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Channel-mix FFN with token shift; returns (out, new_prev)."""
+                     prev: jnp.ndarray,
+                     length=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Channel-mix FFN with token shift; returns (out, new_prev).
+    ``length`` (B,) makes new_prev the last *valid* token per row."""
     shifted = _token_shift(x, prev)
     mu = params["cm_mu"]
     xr = _mix(x, shifted, mu[0].astype(x.dtype))
     xk = _mix(x, shifted, mu[1].astype(x.dtype))
     rgate = jax.nn.sigmoid((xr @ params["cm_r"]).astype(jnp.float32)).astype(x.dtype)
     kk = jnp.square(jax.nn.relu(xk @ params["cm_k"]))
-    return rgate * (kk @ params["cm_v"]), x[:, -1:]
+    return rgate * (kk @ params["cm_v"]), _last_valid(x, length, prev)

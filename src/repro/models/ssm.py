@@ -76,7 +76,8 @@ def pick_chunk(S: int, pref: int) -> int:
 
 def apply_ssm_full(params: Params, cfg: ModelConfig, x: jnp.ndarray,
                    chunk: int = 128,
-                   state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+                   state: Optional[Dict] = None,
+                   length: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Dict]:
     """x: (B, S, d) -> (y (B,S,d), final_state dict).
 
     The per-step state h is (di, N) — 2·ssm_expand·N times wider than the
@@ -85,6 +86,12 @@ def apply_ssm_full(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     (O(log chunk) depth) and a ``lax.scan`` carrying h *across* chunks.
     ``state`` (from a previous chunk / ``init_ssm_state``) makes this a
     continuation — the engine's chunked prefill path.
+
+    ``length`` (B,) marks only the first ``length[b]`` steps of row b as
+    real; trailing steps are shape padding whose state update is forced
+    to the identity (dt = 0 → a = 1, b = 0) and whose samples never
+    enter the carried conv window, so a row's final state equals the
+    unpadded run's (length 0 = untouched row).
     """
     B, S, _ = x.shape
     di, N = cfg.d_inner, cfg.ssm_state
@@ -94,11 +101,19 @@ def apply_ssm_full(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     conv_prev = (state["conv"] if state is not None
                  else jnp.zeros((B, CONV_K - 1, di), xin.dtype))
     xin_stream = jnp.concatenate([conv_prev.astype(xin.dtype), xin], axis=1)
-    new_conv = xin_stream[:, -(CONV_K - 1):]
+    if length is None:
+        new_conv = xin_stream[:, -(CONV_K - 1):]
+    else:
+        # last CONV_K-1 *valid* stream samples: indices length..length+K-2
+        idx = length[:, None] + jnp.arange(CONV_K - 1)[None, :]
+        new_conv = jnp.take_along_axis(xin_stream, idx[:, :, None], axis=1)
     xin = jax.nn.silu(_conv_window(xin_stream, params["conv_w"], S))
 
     dt = jax.nn.softplus((xin @ params["dt_proj"]).astype(jnp.float32)
                          + params["dt_bias"].astype(jnp.float32))  # (B,S,di)
+    if length is not None:
+        valid = jnp.arange(S)[None, :] < length[:, None]    # (B, S)
+        dt = jnp.where(valid[..., None], dt, 0.0)
     bc = (xin @ params["bc_proj"]).astype(jnp.float32)
     Bt, Ct = jnp.split(bc, 2, axis=-1)                      # (B, S, N)
     A = -jnp.exp(params["A_log"])                           # (di, N)

@@ -12,6 +12,7 @@ from repro.serving.swap_store import (  # noqa: F401
 )
 from repro.serving.serve_step import (  # noqa: F401
     build_decode_fn,
+    build_prefill_chunk_fn,
     build_prefill_fn,
     build_train_fn,
     cache_specs,

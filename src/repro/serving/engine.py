@@ -3,12 +3,34 @@ schedules (the "deployment" path of Fig. 1; the simulator is the blue
 path).
 
 The engine drives the unified ``Scheduler`` (Algorithm 1) against an
-actual model: chunked prefill via ``model.prefill_chunk`` per request,
-one *batched* decode step over all active slots per batch.  Token-level
-memory accounting (the scheduler's M) is backed by a ``PagedAllocator``;
-the data plane stores each request in a contiguous cache slot (on TPU,
-dynamic-slice slots are the idiomatic layout — pointer-chasing page
-tables are a CUDA idiom; see DESIGN.md).
+actual model.  Token-level memory accounting (the scheduler's M) is
+backed by a ``PagedAllocator``; the data plane stores each request in a
+contiguous cache slot (on TPU, dynamic-slice slots are the idiomatic
+layout — pointer-chasing page tables are a CUDA idiom; see DESIGN.md).
+
+Execution plane (PR 2) — shape-stable and batched, selected by
+``EngineConfig.plane``:
+
+* ``"batched"`` (default) — all prefill work of a scheduler batch runs
+  as rounds of ONE ``prefill_many`` call over the full (nslots, bucket)
+  token grid.  Chunks are padded to a fixed bucket ladder (powers of
+  two up to ``chunk``) and an explicit per-row ``length`` mask is
+  threaded through ``models.model.prefill_chunk`` down to the attention
+  / SSM / RWKV internals, so one compiled XLA signature per bucket
+  serves every chunk size, request count, and prompt length: the number
+  of distinct compiles is a small constant (see
+  ``Engine.num_compiles`` and the compile-count regression test).
+  Inactive rows carry length 0 and are provably inert.
+* ``"legacy"`` — the PR-1 per-request chunk loop with exact (unpadded)
+  shapes: every distinct tail length triggers a fresh XLA compile.
+  Kept as the honest baseline for ``benchmarks/fig_engine_wall.py``.
+
+Sampling is FUSED into the jitted steps: greedy argmax over the real
+vocabulary happens on device and only (nslots,) int32 token ids ever
+cross to the host — the full (nslots, vocab) logits array is never
+materialized off-device.  ``EngineConfig.decode_append="deferred"``
+routes decode through ``model.decode_step_deferred`` (one cache scatter
+per step instead of one per layer).
 
 Preemption supports BOTH §5.4 restoration paths, selected by
 ``SchedulerConfig.preempt_mode``:
@@ -25,20 +47,38 @@ Preemption supports BOTH §5.4 restoration paths, selected by
 * ``auto`` — per-victim Fig. 8 decision via the cost model
   (``swap_time`` vs ``kv_projection_time``/``recompute_time``).
 
+Swap-out transfers are ASYNC by default (``EngineConfig.async_swap``):
+the victim's slot slice is computed on device (a fresh buffer — later
+cache updates cannot alias it), ``copy_to_host_async`` starts the D2H
+transfer off the critical path, and the snapshot is finalized
+(double-buffered, at most two in flight) at the next step boundary or
+on demand when the victim is re-admitted within the same drain window.
+Store capacity is charged at enqueue time from array metadata — a full
+store still falls back to recompute synchronously — and virtual-time
+charges are identical to the sync path.
+
 Virtual time charges ``cost_model.swap_time`` for each swap-out and
 swap-in, mirroring the simulator, so simulated and engine schedules
 agree.  Measured wall times of the host transfers are tracked in
-``Engine.swap_stats`` (the fig08 validation column).
+``Engine.swap_stats`` (the fig08 validation column); per-batch measured
+wall time lands in ``BatchLog.wall_s``.
 
-Correctness contract (tested): scheduling, chunking, batching and
-preemption — under recompute, swap, AND auto — NEVER change the
+Correctness contract (tested): scheduling, chunking, batching, padding
+and preemption — under recompute, swap, AND auto — NEVER change the
 generated tokens, exactly the paper's "standard inference optimization
-techniques that do not affect inference outputs".
+techniques that do not affect inference outputs".  At the models layer
+the padded cache state is bit-identical to the unpadded call for the
+pure-attention family; for the recurrent families (SSM/RWKV) padding
+changes the inner scans' chunk factorization, so states agree to float
+reduction-order noise (~1e-7 relative) — the same order as the
+chunked-vs-full divergence the parity oracle already tolerates, below
+anything that flips a greedy argmax in practice.
 """
 from __future__ import annotations
 
 import functools
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -53,7 +93,9 @@ from repro.core.request import Request
 from repro.core.scheduler import Scheduler
 from repro.core.simulator import BatchLog, SimResult
 from repro.models import model as M
-from repro.serving.swap_store import KVSwapStore, SwapStoreFullError
+from repro.serving.serve_step import build_prefill_chunk_fn
+from repro.serving.swap_store import (KVSwapStore, SwapEntry,
+                                      SwapStoreFullError)
 
 
 @dataclass
@@ -69,6 +111,30 @@ class EngineConfig:
     #                                    unbounded); a full store makes the
     #                                    victim fall back to recompute
     check_invariants: bool = True
+    # --- execution plane (PR 2) --------------------------------------- #
+    plane: str = "batched"        # "batched" (shape-stable bucketed
+    #                               prefill_many) | "legacy" (PR-1
+    #                               per-request exact-shape chunk loop)
+    decode_append: str = "inline"   # "inline" | "deferred" (one cache
+    #                                 scatter per step, §Perf cell A)
+    async_swap: bool = True       # double-buffered async swap-out D2H
+    min_bucket: int = 8           # smallest tail bucket of the ladder
+
+
+def _bucket_ladder(chunk: int, min_bucket: int) -> List[int]:
+    """Fixed padding targets: powers of two in [min_bucket, chunk), plus
+    ``chunk`` itself.  Every prefill sub-chunk is padded UP to the
+    smallest bucket that holds it, so at most ``len(ladder)`` distinct
+    prefill signatures ever compile."""
+    b = 1
+    while b < min(min_bucket, chunk):
+        b *= 2
+    ladder = []
+    while b < chunk:
+        ladder.append(b)
+        b *= 2
+    ladder.append(chunk)
+    return ladder
 
 
 def _slot_axis(leaf: jnp.ndarray) -> int:
@@ -85,6 +151,8 @@ class Engine:
         ecfg = replace(ecfg) if ecfg is not None else EngineConfig()
         if cfg.window:
             ecfg.chunk = min(ecfg.chunk, cfg.window)
+        assert ecfg.plane in ("batched", "legacy"), ecfg.plane
+        assert ecfg.decode_append in ("inline", "deferred"), ecfg.decode_append
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -102,11 +170,21 @@ class Engine:
         self.slot_of: Dict[int, int] = {}
         self.token_ids: Dict[int, List[int]] = {}
         self.outputs: Dict[int, List[int]] = {}
+        self.buckets = _bucket_ladder(ecfg.chunk, ecfg.min_bucket)
         self.swap_store = KVSwapStore(capacity_bytes=ecfg.swap_bytes)
+        # in-flight async swap-out snapshots (rid -> (store entry whose
+        # cache leaves are still device arrays mid-D2H, enqueue step)).
+        # An entry enqueued during step N overlaps its D2H copy with
+        # step N+1's compute and is finalized at the END of step N+1 —
+        # or earlier, on same-window re-admission / double-buffer
+        # pressure (more than two transfers in flight).
+        self._pending_swaps: "OrderedDict[int, Tuple[SwapEntry, int]]" = \
+            OrderedDict()
+        self._step_no = 0
         # measured host-transfer wall times (fig08 validation column)
         self.swap_stats: Dict[str, float] = dict(
             swap_outs=0, swap_ins=0, kv_out=0, kv_in=0, swap_fallbacks=0,
-            wall_out_s=0.0, wall_in_s=0.0)
+            drains_on_swapin=0, wall_out_s=0.0, wall_in_s=0.0)
         # swap-out virtual-time charges from rounds that admitted no
         # items, owed to the next executed batch (mirrors the simulator)
         self._carry_swap_s = 0.0
@@ -119,6 +197,15 @@ class Engine:
     # ------------------------------------------------------------------ #
     def _build_jits(self) -> None:
         cfg, ecfg = self.cfg, self.ecfg
+        vocab = cfg.vocab_size
+
+        def mask_merge(active, new_cache, old_cache):
+            def merge(new, old):
+                ax = _slot_axis(new)
+                m = active.reshape(
+                    (1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
+                return jnp.where(m, new, old)
+            return jax.tree.map(merge, new_cache, old_cache)
 
         def slot_slice(cache, slot):
             return jax.tree.map(
@@ -137,17 +224,28 @@ class Engine:
                                              moe_impl=ecfg.moe_impl)
             return logits[0], slot_write(cache, new_sl, slot)
 
-        def decode_all(params, cache, tokens, mask):
-            logits, new_cache = M.decode_step(cfg, params, tokens, cache,
-                                              impl=ecfg.impl,
-                                              moe_impl=ecfg.moe_impl)
+        chunk_fn = build_prefill_chunk_fn(cfg, impl=ecfg.impl,
+                                          moe_impl=ecfg.moe_impl)
 
-            def merge(new, old):
-                ax = _slot_axis(new)
-                m = mask.reshape((1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
-                return jnp.where(m, new, old)
+        def prefill_many(params, cache, tokens, lengths):
+            """One batched bucketed chunk round over ALL slots.
+            tokens (nslots, bucket); lengths (nslots,), 0 = inert row.
+            Returns (greedy token ids (nslots,), merged cache) — fused
+            on-device sampling, full logits never leave the device."""
+            logits, new_cache = chunk_fn(params, tokens, cache, lengths)
+            toks = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+            return toks, mask_merge(lengths > 0, new_cache, cache)
 
-            return logits, jax.tree.map(merge, new_cache, cache)
+        decode_step = (M.decode_step_deferred
+                       if ecfg.decode_append == "deferred"
+                       else M.decode_step)
+
+        def decode_many(params, cache, tokens, mask):
+            logits, new_cache = decode_step(cfg, params, tokens, cache,
+                                            impl=ecfg.impl,
+                                            moe_impl=ecfg.moe_impl)
+            toks = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+            return toks, mask_merge(mask, new_cache, cache)
 
         def reset_slot(cache, slot):
             zeroed = jax.tree.map(
@@ -157,12 +255,28 @@ class Engine:
             return slot_write(cache, zeroed, slot)
 
         self._prefill_one = jax.jit(prefill_one)
-        self._decode_all = jax.jit(decode_all)
+        self._prefill_many = jax.jit(prefill_many)
+        self._decode_many = jax.jit(decode_many)
         self._reset_slot = jax.jit(reset_slot)
-        # swap data plane: slot snapshot (device->host via device_get on
-        # the sliced result) and slot restore (host->device write)
+        # swap data plane: slot snapshot (device->host) and slot restore
         self._slot_slice = jax.jit(slot_slice)
         self._slot_write = jax.jit(slot_write)
+        self._jit_fns = [self._prefill_one, self._prefill_many,
+                         self._decode_many, self._reset_slot,
+                         self._slot_slice, self._slot_write]
+
+    @property
+    def num_compiles(self) -> int:
+        """Distinct XLA compiles across every engine entry point.  The
+        batched plane keeps this a small constant — independent of
+        request count, prompt lengths, and preemptions (tested)."""
+        return sum(f._cache_size() for f in self._jit_fns)
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise AssertionError(f"chunk step {n} exceeds ladder {self.buckets}")
 
     # ------------------------------------------------------------------ #
     def submit(self, r: Request) -> None:
@@ -197,30 +311,80 @@ class Engine:
         """Snapshot the victim's slot to the host store, then free it.
         Returns False when the store is full: the snapshot is dropped and
         the victim falls back to discard-and-recompute (finite host
-        memory is the five-minute-rule's operating constraint)."""
+        memory is the five-minute-rule's operating constraint).
+
+        With ``async_swap`` the snapshot is a device-side slice whose
+        host copy is started here and finalized later (``_drain_swaps``);
+        capacity is charged immediately from array metadata so the
+        full-store fallback stays synchronous and deterministic."""
         t0 = time.perf_counter()
         slot = self.slot_of[victim.rid]
-        snap = jax.device_get(self._slot_slice(self.cache, jnp.int32(slot)))
+        snap = self._slot_slice(self.cache, jnp.int32(slot))
         try:
-            self.swap_store.put(victim.rid, snap, self.token_ids[victim.rid],
-                                victim.suspended_m)
+            if self.ecfg.async_swap:
+                nbytes = sum(l.nbytes for l in jax.tree.leaves(snap))
+                entry = self.swap_store.put(
+                    victim.rid, snap, self.token_ids[victim.rid],
+                    victim.suspended_m, nbytes=nbytes)
+                for leaf in jax.tree.leaves(snap):
+                    leaf.copy_to_host_async()
+                self._pending_swaps[victim.rid] = (entry, self._step_no)
+            else:
+                snap = jax.device_get(snap)
+                self.swap_store.put(victim.rid, snap,
+                                    self.token_ids[victim.rid],
+                                    victim.suspended_m)
+                if self.ecfg.check_invariants:
+                    assert int(np.asarray(snap["index"])[0]) \
+                        == victim.suspended_m, \
+                        (victim.rid, snap["index"], victim.suspended_m)
         except SwapStoreFullError:
             victim.drop_suspended()
             self.sched.num_swaps -= 1   # the suspend did not stick
             self.swap_stats["swap_fallbacks"] += 1
             self._release(victim.rid)
             return False
-        if self.ecfg.check_invariants:
-            assert int(np.asarray(snap["index"])[0]) == victim.suspended_m, \
-                (victim.rid, snap["index"], victim.suspended_m)
         self.swap_stats["swap_outs"] += 1
         self.swap_stats["kv_out"] += victim.suspended_m
         self.swap_stats["wall_out_s"] += time.perf_counter() - t0
         self._release(victim.rid)
+        # double buffering: finalize the oldest transfer(s) OUTSIDE the
+        # timed enqueue window above (the drain bills its own wait into
+        # wall_out_s — overlapping windows would double-count it)
+        while len(self._pending_swaps) > 2:
+            self._drain_swaps(rid=next(iter(self._pending_swaps)))
         return True
+
+    def _drain_swaps(self, rid: Optional[int] = None,
+                     before_step: Optional[int] = None) -> None:
+        """Finalize in-flight swap-out transfers: block on the async D2H
+        copy and replace the store entry's device leaves with host
+        arrays.  ``rid`` drains one entry (same-window re-admission,
+        double-buffer pressure); ``before_step`` drains entries enqueued
+        before that step (the end-of-step boundary); neither drains
+        everything (end of run)."""
+        if rid is not None:
+            rids = [rid] if rid in self._pending_swaps else []
+        elif before_step is not None:
+            rids = [r for r, (_, s) in self._pending_swaps.items()
+                    if s < before_step]
+        else:
+            rids = list(self._pending_swaps)
+        for r in rids:
+            entry, _ = self._pending_swaps.pop(r)
+            t0 = time.perf_counter()
+            entry.cache = jax.device_get(entry.cache)
+            if self.ecfg.check_invariants:
+                assert int(np.asarray(entry.cache["index"])[0]) \
+                    == entry.num_kv, (r, entry.cache["index"], entry.num_kv)
+            self.swap_stats["wall_out_s"] += time.perf_counter() - t0
 
     def _swap_in(self, r: Request) -> None:
         """Restore r's snapshot into a free slot; no refill is needed."""
+        if r.rid in self._pending_swaps:
+            # re-admitted within the drain window: finalize on demand
+            self.swap_stats["drains_on_swapin"] += 1
+            self._drain_swaps(rid=r.rid)
         t0 = time.perf_counter()
         entry = self.swap_store.pop(r.rid)
         slot = self._claim_slot(r.rid, reset=False)  # fully overwritten
@@ -244,11 +408,72 @@ class Engine:
         return int(jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1))
 
     # ------------------------------------------------------------------ #
+    def _run_prefills_legacy(self, prefill_items) -> Dict[int, int]:
+        """PR-1 plane: per-request chunk loop with exact (unpadded)
+        shapes — every distinct tail length compiles a new signature."""
+        final_tok: Dict[int, int] = {}
+        for r, c in prefill_items:
+            slot = self.slot_of[r.rid]
+            ids = self.token_ids[r.rid]
+            start, remaining = r.m, c
+            logits = None
+            while remaining > 0:
+                step_c = min(self.ecfg.chunk, remaining)
+                toks = jnp.asarray([ids[start:start + step_c]], jnp.int32)
+                logits, self.cache = self._prefill_one(
+                    self.params, self.cache, jnp.int32(slot), toks)
+                start += step_c
+                remaining -= step_c
+            if r.m + c == r.target_context:   # this batch emits a token
+                final_tok[r.rid] = self._sample(logits)
+        return final_tok
+
+    def _run_prefills_batched(self, prefill_items) -> Dict[int, int]:
+        """Shape-stable plane: rounds of one ``prefill_many`` over the
+        full slot grid, sub-chunks padded to the bucket ladder.  Only
+        (nslots,) sampled token ids are fetched, and only on rounds
+        where some request finishes its batch allotment."""
+        nslots = self.ecfg.nslots
+        # [request, slot, next-token cursor, tokens left this batch]
+        plans = [[r, self.slot_of[r.rid], r.m, c] for r, c in prefill_items]
+        emits = {r.rid: r.m + c == r.target_context for r, c in prefill_items}
+        final_tok: Dict[int, int] = {}
+        while True:
+            steps = {p[1]: min(self.ecfg.chunk, p[3])
+                     for p in plans if p[3] > 0}
+            if not steps:
+                break
+            bucket = self._bucket_for(max(steps.values()))
+            toks = np.zeros((nslots, bucket), np.int32)
+            lens = np.zeros((nslots,), np.int32)
+            finishing: List[Tuple[Request, int]] = []
+            for p in plans:
+                r, slot, cursor, rem = p
+                if rem <= 0:
+                    continue
+                sc = steps[slot]
+                toks[slot, :sc] = self.token_ids[r.rid][cursor:cursor + sc]
+                lens[slot] = sc
+                p[2] += sc
+                p[3] -= sc
+                if p[3] == 0:
+                    finishing.append((r, slot))
+            tok_ids, self.cache = self._prefill_many(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(lens))
+            if any(emits[r.rid] for r, _ in finishing):
+                host = np.asarray(tok_ids)          # (nslots,) int32 only
+                for r, slot in finishing:
+                    if emits[r.rid]:
+                        final_tok[r.rid] = int(host[slot])
+        return final_tok
+
+    # ------------------------------------------------------------------ #
     def step(self) -> int:
         """Run one scheduler batch. Returns the number of items executed."""
         if not self.sched.has_work():
             return 0
         t0 = time.perf_counter()
+        self._step_no += 1
         batch = self.sched.get_next_batch()
         swap_s = 0.0
         num_swap_out = num_swap_in = 0
@@ -265,6 +490,7 @@ class Engine:
             # the next executed batch (mirrors the simulator's carry)
             self._carry_swap_s += swap_s
             self._carry_out += num_swap_out
+            self._drain_swaps(before_step=self._step_no)
             self.wall += time.perf_counter() - t0
             return 0
         swap_s += self._carry_swap_s
@@ -294,33 +520,28 @@ class Engine:
             + swap_s
         self.now += dt
 
-        # ---- prefills (per request, chunked) --------------------------- #
-        for r, c in prefill_items:
-            if r.rid not in self.slot_of:
-                self._claim_slot(r.rid)
-            self.allocator.allocate(r.rid, c)
-            slot = self.slot_of[r.rid]
-            ids = self.token_ids[r.rid]
-            start, remaining = r.m, c
-            logits = None
-            while remaining > 0:
-                step_c = min(self.ecfg.chunk, remaining)
-                toks = jnp.asarray([ids[start:start + step_c]], jnp.int32)
-                logits, self.cache = self._prefill_one(
-                    self.params, self.cache, jnp.int32(slot), toks)
-                start += step_c
-                remaining -= step_c
-            generated = r.advance(c, self.now)
-            if generated:
-                tok = self._sample(logits)
-                self.outputs[r.rid].append(tok)
-                if r.finished:
-                    self.sched.complete(r)
-                    self._release(r.rid)
-                else:
-                    self.token_ids[r.rid].append(tok)
+        # ---- prefills (one batched bucketed call per round) ------------- #
+        if prefill_items:
+            for r, c in prefill_items:
+                if r.rid not in self.slot_of:
+                    self._claim_slot(r.rid)
+                self.allocator.allocate(r.rid, c)
+            runner = (self._run_prefills_batched
+                      if self.ecfg.plane == "batched"
+                      else self._run_prefills_legacy)
+            final_tok = runner(prefill_items)
+            for r, c in prefill_items:
+                generated = r.advance(c, self.now)
+                if generated:
+                    tok = final_tok[r.rid]
+                    self.outputs[r.rid].append(tok)
+                    if r.finished:
+                        self.sched.complete(r)
+                        self._release(r.rid)
+                    else:
+                        self.token_ids[r.rid].append(tok)
 
-        # ---- decodes (one batched step over all slots) ------------------ #
+        # ---- decodes (one batched fused step over all slots) ------------ #
         if decode_items:
             nslots = self.ecfg.nslots
             toks = np.zeros((nslots,), np.int32)
@@ -330,14 +551,14 @@ class Engine:
                 toks[slot] = self.token_ids[r.rid][-1]
                 mask[slot] = True
                 self.allocator.allocate(r.rid, 1)
-            logits, self.cache = self._decode_all(
+            tok_ids, self.cache = self._decode_many(
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(mask))
-            logits = np.asarray(logits[..., :self.cfg.vocab_size])
+            host = np.asarray(tok_ids)              # (nslots,) int32 only
             for r, c in decode_items:
                 slot = self.slot_of[r.rid]
                 r.advance(c, self.now)
-                tok = int(np.argmax(logits[slot]))
+                tok = int(host[slot])
                 self.outputs[r.rid].append(tok)
                 if r.finished:
                     self.sched.complete(r)
@@ -345,7 +566,12 @@ class Engine:
                 else:
                     self.token_ids[r.rid].append(tok)
 
-        self.wall += time.perf_counter() - t0
+        # end-of-step boundary: snapshots enqueued in EARLIER steps have
+        # had a full step of compute to overlap their D2H copy; finalize
+        # them now (this step's own snapshots stay in flight)
+        self._drain_swaps(before_step=self._step_no)
+        wall_s = time.perf_counter() - t0
+        self.wall += wall_s
         if self.ecfg.check_invariants:
             self.allocator.check_invariants()
             self.swap_store.check_invariants()
@@ -357,7 +583,7 @@ class Engine:
             tokens=spec.total_tokens, kv_used=kv_used,
             preempted=len(batch.preempted),
             swapped_out=num_swap_out, swapped_in=num_swap_in,
-            swap_s=swap_s))
+            swap_s=swap_s, wall_s=wall_s))
         return len(batch.items)
 
     def _check_index_sync(self, batch) -> None:
@@ -391,7 +617,9 @@ class Engine:
                     "engine deadlock: work remains but nothing schedulable")
         else:
             raise RuntimeError("engine did not converge")
+        self._drain_swaps()
         if self.ecfg.check_invariants:
+            assert not self._pending_swaps
             assert len(self.swap_store) == 0, \
                 f"swap store leaked rids {self.swap_store.suspended_rids}"
         sim = SimResult(requests=list(requests), batches=self.batch_logs,
@@ -399,7 +627,8 @@ class Engine:
                         num_swaps=self.sched.num_swaps)
         return EngineResult(outputs=dict(self.outputs), metrics=sim,
                             wall_time=self.wall,
-                            swap_stats=dict(self.swap_stats))
+                            swap_stats=dict(self.swap_stats),
+                            num_compiles=self.num_compiles)
 
 
 @dataclass
@@ -408,27 +637,46 @@ class EngineResult:
     metrics: SimResult
     wall_time: float
     swap_stats: Dict[str, float] = field(default_factory=dict)
+    num_compiles: int = 0
 
 
 # --------------------------------------------------------------------- #
 # reference generation (no scheduler) — the parity oracle
 # --------------------------------------------------------------------- #
 
+
+@functools.lru_cache(maxsize=64)
+def _reference_decode_fn(cfg: ModelConfig, impl: str, moe_impl: str):
+    """Jitted (params, cur (1,), cache) -> (next token (1,), cache) with
+    fused greedy sampling; cached per (cfg, impl, moe_impl) so repeated
+    parity-oracle calls stop paying an uncompiled decode per token."""
+
+    def step(params, cur, cache):
+        logits, cache = M.decode_step(cfg, params, cur, cache,
+                                      impl=impl, moe_impl=moe_impl)
+        nxt = jnp.argmax(logits[:, :cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return jax.jit(step)
+
+
 def generate_reference(cfg: ModelConfig, params: Any, prompt: Sequence[int],
                        num_tokens: int, *, cache_len: int,
                        impl: str = "reference",
                        moe_impl: str = "dense") -> List[int]:
-    """Greedy generation of one request, full prefill + sequential decode."""
+    """Greedy generation of one request, full prefill + sequential decode.
+    The decode loop is jitted (one compile per (cfg, cache shape), reused
+    across calls) and samples on device — only token ids reach the host."""
     toks = jnp.asarray([list(prompt)], jnp.int32)
     logits, cache = M.prefill(cfg, params, {"tokens": toks},
                               cache_len=cache_len, impl=impl,
                               moe_impl=moe_impl)
     out: List[int] = []
-    cur = int(jnp.argmax(logits[0, :cfg.vocab_size]))
-    out.append(cur)
+    cur = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    out.append(int(cur[0]))
+    decode = _reference_decode_fn(cfg, impl, moe_impl)
     for _ in range(num_tokens - 1):
-        logits, cache = M.decode_step(cfg, params, jnp.asarray([cur]), cache,
-                                      impl=impl, moe_impl=moe_impl)
-        cur = int(jnp.argmax(logits[0, :cfg.vocab_size]))
-        out.append(cur)
+        cur, cache = decode(params, cur, cache)
+        out.append(int(cur[0]))
     return out

@@ -33,6 +33,24 @@ def build_prefill_fn(cfg: ModelConfig, *, cache_len: int,
     return prefill_step
 
 
+def build_prefill_chunk_fn(cfg: ModelConfig, *, impl: str = "reference",
+                           moe_impl: str = "sparse",
+                           unroll: bool = False) -> Callable:
+    """(params, tokens (B, bucket), cache, lengths (B,)) -> (logits, cache).
+
+    The shape-stable bucketed chunk step of the engine's batched
+    execution plane: tokens are padded to a fixed bucket length and
+    ``lengths`` marks each row's real prefix (0 = inert row), so one
+    compiled signature per bucket serves every chunk size."""
+
+    def chunk_step(params, tokens, cache, lengths):
+        return M.prefill_chunk(cfg, params, tokens, cache, impl=impl,
+                               moe_impl=moe_impl, unroll=unroll,
+                               length=lengths)
+
+    return chunk_step
+
+
 def build_decode_fn(cfg: ModelConfig, *, impl: str = "reference",
                     moe_impl: str = "sparse", unroll: bool = False,
                     append: str = "inline") -> Callable:

@@ -57,13 +57,18 @@ class KVSwapStore:
 
     # ------------------------------------------------------------------ #
     def put(self, rid: int, cache: Any, tokens: List[int],
-            num_kv: int) -> SwapEntry:
-        """Suspend rid's slot snapshot.  One live entry per rid."""
+            num_kv: int, nbytes: int = 0) -> SwapEntry:
+        """Suspend rid's slot snapshot.  One live entry per rid.
+
+        ``nbytes`` lets callers charge capacity from array metadata
+        without forcing a host transfer — the async swap-out path hands
+        over device arrays whose D2H copy is still in flight and
+        finalizes the entry at drain time."""
         if rid in self._entries:
             raise ValueError(f"rid {rid} already suspended")
         assert num_kv > 0, (rid, num_kv)
         entry = SwapEntry(rid=rid, cache=cache, tokens=list(tokens),
-                          num_kv=num_kv)
+                          num_kv=num_kv, nbytes=nbytes)
         if (self.capacity_bytes is not None
                 and self._nbytes + entry.nbytes > self.capacity_bytes):
             raise SwapStoreFullError(

@@ -1,0 +1,229 @@
+"""Execution-plane invariants (PR 2): shape-stable compile counts,
+padded-bucket parity, fused sampling, deferred decode append, and the
+async double-buffered swap-out path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Request, TheoreticalCostModel, get_hardware,
+                        make_scheduler)
+from repro.models import model as M
+from repro.serving import Engine, EngineConfig, generate_reference
+
+RNG = jax.random.PRNGKey(0)
+
+
+def build(name="tinyllama-1.1b", M_kv=60, nslots=4, scheduler="vllm",
+          replacement="srf", cache_len=64, chunk=16,
+          preempt_mode="recompute", **ekw):
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32")
+    params = M.init_params(cfg, RNG)
+    sched = make_scheduler(scheduler, M_kv, S=128, replacement=replacement,
+                           preempt_mode=preempt_mode)
+    cm = TheoreticalCostModel(cfg, get_hardware("tpu_v5e"))
+    eng = Engine(cfg, params, sched,
+                 EngineConfig(nslots=nslots, cache_len=cache_len,
+                              chunk=chunk, **ekw),
+                 cost_model=cm)
+    return cfg, params, eng
+
+
+def requests_for(cfg, n=5, seed=0, max_i=25):
+    rs = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        I, O = int(rs.randint(4, max_i)), int(rs.randint(3, 9))
+        prompt = rs.randint(0, cfg.vocab_size, size=I).tolist()
+        out.append(Request(rid=i, input_len=I, output_len=O,
+                           arrival=0.0, prompt=prompt))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# shape stability: compile count is a small constant
+# --------------------------------------------------------------------- #
+
+def test_compile_count_constant_across_workloads():
+    """The batched plane's number of distinct XLA compiles must not grow
+    with request count, prompt lengths, or preemptions — the
+    shape-stability invariant the bucket ladder + length mask buy."""
+    counts = {}
+    preempts = {}
+    for tag, (n, seed) in {"small": (6, 2), "large": (14, 5)}.items():
+        cfg, params, eng = build(M_kv=50, preempt_mode="swap")
+        res = eng.run(requests_for(cfg, n=n, seed=seed, max_i=40))
+        counts[tag] = res.num_compiles
+        preempts[tag] = res.metrics.num_preemptions
+    assert min(preempts.values()) > 0, preempts   # churn is exercised
+    # 2.3x the requests, fresh prompt lengths, more preemption churn:
+    # the signature count must not move, and stays a small constant
+    assert counts["small"] == counts["large"], counts
+    assert counts["small"] <= 10, counts
+
+
+def test_legacy_plane_recompiles_per_tail():
+    """Sanity check on the baseline the benchmark compares against: the
+    PR-1 plane compiles a new prefill signature per distinct tail."""
+    cfg, params, eng_leg = build(plane="legacy", M_kv=200)
+    res_leg = eng_leg.run(requests_for(cfg, n=8, seed=3, max_i=40))
+    cfg, params, eng_bat = build(plane="batched", M_kv=200)
+    res_bat = eng_bat.run(requests_for(cfg, n=8, seed=3, max_i=40))
+    assert res_leg.num_compiles > res_bat.num_compiles
+    assert res_leg.outputs == res_bat.outputs
+
+
+# --------------------------------------------------------------------- #
+# parity: planes and knobs never change tokens
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "hymba-1.5b",
+                                  "rwkv6-7b"])
+def test_plane_parity_under_preemption(name):
+    """legacy vs batched vs batched+deferred, under real preemption, on
+    dense / windowed-hybrid / SSM — identical tokens, all matching the
+    scheduler-free reference oracle."""
+    outs = {}
+    for tag, kw in (("legacy", dict(plane="legacy")),
+                    ("batched", dict(plane="batched")),
+                    ("deferred", dict(plane="batched",
+                                      decode_append="deferred"))):
+        cfg, params, eng = build(name, **kw)
+        reqs = requests_for(cfg)
+        res = eng.run(reqs)
+        assert res.metrics.num_preemptions > 0
+        outs[tag] = res.outputs
+    assert outs["legacy"] == outs["batched"] == outs["deferred"]
+    cfg, params, _ = build(name)
+    for r in requests_for(cfg):
+        ref = generate_reference(cfg, params, r.prompt, r.output_len,
+                                 cache_len=64)
+        assert outs["batched"][r.rid] == ref, f"rid={r.rid}"
+
+
+def test_padded_chunk_matches_unpadded():
+    """models-layer contract: a bucketed chunk with a length mask leaves
+    every cache leaf equal to the unpadded call — bit-identical for the
+    pure-attention family (masked writes are dropped, nothing else
+    moves), and within float reduction-order noise for the recurrent
+    families (padding changes the inner scans' chunk factorization, so
+    the same sums associate differently) — and rows with length 0 are
+    untouched."""
+    for name in ("tinyllama-1.1b", "hymba-1.5b", "rwkv6-7b"):
+        cfg = dataclasses.replace(get_config(name).reduced(),
+                                  dtype="float32")
+        params = M.init_params(cfg, RNG)
+        rs = np.random.RandomState(7)
+        toks = rs.randint(0, cfg.vocab_size, size=(2, 13)).astype(np.int32)
+
+        plain = M.init_cache(cfg, 2, 64)
+        _, plain = M.prefill_chunk(cfg, params, jnp.asarray(toks), plain)
+
+        padded = M.init_cache(cfg, 2, 64)
+        grid = np.zeros((2, 16), np.int32)
+        grid[:, :13] = toks
+        _, padded = M.prefill_chunk(cfg, params, jnp.asarray(grid), padded,
+                                    length=jnp.asarray([13, 13], jnp.int32))
+        for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(padded)):
+            a, b = np.asarray(a), np.asarray(b)
+            if cfg.family == "dense":
+                np.testing.assert_array_equal(a, b)
+            else:
+                np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+        # inert rows: row 1 gets length 0 and must not move at all
+        before = jax.tree.map(lambda a: np.asarray(a).copy(), padded)
+        _, after = M.prefill_chunk(cfg, params, jnp.asarray(grid), padded,
+                                   length=jnp.asarray([3, 0], jnp.int32))
+        for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+            a, b = np.asarray(a), np.asarray(b)
+            sl = (slice(None),) * (0 if a.ndim == 1 else 1) + (1,)
+            np.testing.assert_array_equal(a[sl], b[sl])
+
+
+# --------------------------------------------------------------------- #
+# async swap-out
+# --------------------------------------------------------------------- #
+
+def test_async_swap_parity_and_drain_accounting():
+    """Async double-buffered swap-outs: tokens identical to the sync
+    path, every pending transfer drained, store leak-free."""
+    outs = {}
+    for tag, kw in (("sync", dict(async_swap=False)),
+                    ("async", dict(async_swap=True))):
+        cfg, params, eng = build(preempt_mode="swap", **kw)
+        reqs = requests_for(cfg)
+        res = eng.run(reqs)
+        assert res.metrics.num_swaps > 0
+        assert res.swap_stats["swap_ins"] == res.swap_stats["swap_outs"] > 0
+        assert not eng._pending_swaps      # all transfers finalized
+        assert len(eng.swap_store) == 0
+        outs[tag] = res.outputs
+    assert outs["sync"] == outs["async"]
+
+
+def test_async_swap_readmit_within_drain_window():
+    """A victim swapped out in step N and re-admitted in step N+1 is
+    still mid-flight (entries drain at the END of step N+1): the
+    swap-in must finalize the transfer on demand and restore exactly."""
+    cfg, params, eng = build(preempt_mode="swap", async_swap=True,
+                             nslots=2, M_kv=40)
+    reqs = requests_for(cfg, n=4, seed=0)
+    res = eng.run(reqs)
+    assert res.metrics.num_swaps > 0
+    # at least one same-window re-admission actually happened
+    assert res.swap_stats["drains_on_swapin"] > 0, res.swap_stats
+    # and the restored schedule still matches the reference oracle
+    for r in reqs:
+        ref = generate_reference(cfg, params, r.prompt, r.output_len,
+                                 cache_len=64)
+        assert res.outputs[r.rid] == ref, f"rid={r.rid}"
+
+
+def test_async_swap_store_full_mid_flight_falls_back():
+    """The store filling while transfers are in flight must fall back to
+    discard-and-recompute, decrement num_swaps, and change no tokens."""
+    wl = dict(n=8, seed=1, max_i=40)
+    cfg, params, eng = build(preempt_mode="swap", async_swap=True, M_kv=50)
+    ref_res = eng.run(requests_for(cfg, **wl))
+    assert ref_res.swap_stats["swap_fallbacks"] == 0
+    assert ref_res.metrics.num_swaps > 0
+
+    # capacity for roughly one in-flight snapshot: later victims overflow
+    one_slot = sum(
+        leaf.nbytes for leaf in jax.tree.leaves(
+            eng._slot_slice(eng.cache, jnp.int32(0))))
+    cfg, params, eng = build(preempt_mode="swap", async_swap=True, M_kv=50,
+                             swap_bytes=int(one_slot * 1.5))
+    reqs = requests_for(cfg, **wl)
+    res = eng.run(reqs)
+    assert res.swap_stats["swap_outs"] > 0       # some swaps still fit
+    assert res.swap_stats["swap_fallbacks"] > 0  # and some overflowed
+    # every fallback un-counted its swap: per-request counters agree
+    assert sum(r.swaps for r in reqs) == res.swap_stats["swap_outs"] \
+        == res.metrics.num_swaps
+    assert res.outputs == ref_res.outputs
+
+    # fits-nothing store: every suspend falls back, num_swaps ends at 0
+    cfg, params, eng = build(preempt_mode="swap", async_swap=True, M_kv=50,
+                             swap_bytes=1)
+    reqs = requests_for(cfg, **wl)
+    res = eng.run(reqs)
+    assert res.swap_stats["swap_fallbacks"] > 0
+    assert res.metrics.num_swaps == 0 and sum(r.swaps for r in reqs) == 0
+    assert res.outputs == ref_res.outputs
+
+
+# --------------------------------------------------------------------- #
+# instrumentation
+# --------------------------------------------------------------------- #
+
+def test_batch_logs_carry_wall_time():
+    cfg, params, eng = build(M_kv=300)
+    res = eng.run(requests_for(cfg, n=3))
+    assert res.metrics.batches
+    assert all(b.wall_s > 0 for b in res.metrics.batches)
+    assert sum(b.wall_s for b in res.metrics.batches) <= res.wall_time + 1e-6
