@@ -14,11 +14,15 @@ benchmark runs the SAME workload through
                    sampling and async swap-out transfers,
   * ``batched+deferred`` — ditto, with the once-per-step deferred
                    cache append on the decode path,
+  * ``paged``    — pooled per-layer KV pages + block tables (PR 4):
+                   the allocator's page map IS the memory layout;
+                   decode flash-decodes over scalar-prefetched pages,
 
 and reports wall-time throughput (tok/s), the number of distinct XLA
 compiles, and the speedup over legacy.  Outputs must be token-identical
-across planes (the correctness contract), and the batched plane's
-compile count must stay a small constant.
+across planes (the correctness contract), and the batched/paged planes'
+compile counts must stay a small constant.  (Shared-prefix reuse has its
+own figure: ``fig_prefix_sharing``.)
 """
 from __future__ import annotations
 
@@ -46,7 +50,8 @@ def _workload(cfg, n, seed=0):
 
 
 def _run_plane(cfg, params, cm, n_requests, M_kv, *, plane,
-               decode_append="inline", async_swap=True, preempt_mode="swap"):
+               decode_append="inline", async_swap=True, preempt_mode="swap",
+               page_size=1):
     from repro.core import make_scheduler
     from repro.serving import Engine, EngineConfig
 
@@ -55,7 +60,7 @@ def _run_plane(cfg, params, cm, n_requests, M_kv, *, plane,
     eng = Engine(cfg, params, sched,
                  EngineConfig(nslots=4, cache_len=64, chunk=16,
                               plane=plane, decode_append=decode_append,
-                              async_swap=async_swap),
+                              async_swap=async_swap, page_size=page_size),
                  cost_model=cm)
     reqs = _workload(cfg, n_requests)
     t0 = time.perf_counter()
@@ -89,6 +94,7 @@ def run(smoke: bool = False, n_requests: int = 0) -> dict:
         ("batched", dict(plane="batched")),
         ("batched+deferred", dict(plane="batched",
                                   decode_append="deferred")),
+        ("paged", dict(plane="paged", page_size=8)),
     ]
     results = {}
     for name, kw in planes:
@@ -108,13 +114,14 @@ def run(smoke: bool = False, n_requests: int = 0) -> dict:
         ["plane", "tokens", "wall (s)", "tok/s", "XLA compiles",
          "speedup", "preempt", "swaps"], rows)
 
-    # correctness contract: padding/batching/fusion change NO tokens
+    # correctness contract: padding/batching/fusion/paging change NO tokens
     for name, _ in planes[1:]:
         assert results[name]["outputs"] == base["outputs"], \
             f"{name} changed generated tokens"
-    # shape-stability: the batched plane compiles a small constant number
-    # of signatures; the legacy plane compiles per distinct tail length
+    # shape-stability: the batched AND paged planes compile a small
+    # constant number of signatures; legacy compiles per distinct tail
     assert results["batched"]["compiles"] <= 10, results["batched"]["compiles"]
+    assert results["paged"]["compiles"] <= 10, results["paged"]["compiles"]
     assert base["compiles"] > results["batched"]["compiles"], \
         (base["compiles"], results["batched"]["compiles"])
     # the point of the exercise: measured wall-time throughput improves

@@ -22,7 +22,7 @@ from benchmarks import (appa_low_contention, appb_engine_validation,  # noqa: E4
                         fig07_slo_pareto, fig08_recompute_vs_swap,
                         fig09_schedulers, fig11_preemption_free,
                         fig12_vary_m, fig13_csp, fig14_srf, fig_engine_wall,
-                        five_minute_rule, roofline_table)
+                        fig_prefix_sharing, five_minute_rule, roofline_table)
 
 # (name, module, smoke-mode kwargs).  Modules without a size knob are
 # already tiny/analytical and run unchanged in smoke mode.
@@ -39,6 +39,7 @@ MODULES = [
     ("Fig 14 SRF vs NRF", fig14_srf, {"n": 128}),
     ("App B  engine-vs-sim validation", appb_engine_validation, {}),
     ("$Perf  engine wall-time planes", fig_engine_wall, {"smoke": True}),
+    ("$Perf  shared-prefix page reuse", fig_prefix_sharing, {"smoke": True}),
     ("App C  heterogeneous ranking", appc_ranking, {"W": 96}),
     ("$6     five-minute rule", five_minute_rule, {}),
     ("$Roofline table (dry-run artifacts)", roofline_table, {}),

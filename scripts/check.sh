@@ -1,13 +1,22 @@
 #!/usr/bin/env sh
 # Single offline regression entry point (also: `make check`):
-#   1. tier-1 pytest suite
-#   2. every figure benchmark at smoke sizes (includes fig_engine_wall)
+#   1. pytest suite — FAST tier by default (skips tests marked `slow`,
+#      the heaviest cross-plane parity sweeps); set CHECK_FULL=1 to run
+#      the complete tier-1 suite (what `python -m pytest -x -q` runs)
+#   2. every figure benchmark at smoke sizes (includes fig_engine_wall
+#      and fig_prefix_sharing)
 # Extra arguments are forwarded to pytest (e.g. scripts/check.sh -k engine).
 set -e
 cd "$(dirname "$0")/.."
 
-echo "== tier-1 tests =="
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+if [ -n "${CHECK_FULL:-}" ]; then
+    echo "== tier-1 tests (full) =="
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+else
+    echo "== tier-1 tests (fast tier; CHECK_FULL=1 for the full suite) =="
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+        -m "not slow" "$@"
+fi
 
 echo "== smoke benchmarks =="
 python -m benchmarks.run --smoke

@@ -18,7 +18,11 @@ from repro.core.csp import (  # noqa: F401
 )
 from repro.core.five_minute_rule import break_even_interval, break_even_table  # noqa: F401
 from repro.core.histogram import OutputLengthHistogram  # noqa: F401
-from repro.core.kvcache import OutOfPagesError, PagedAllocator  # noqa: F401
+from repro.core.kvcache import (  # noqa: F401
+    OutOfPagesError,
+    PagedAllocator,
+    PrefixCache,
+)
 from repro.core.policies import group_requests, select_victim  # noqa: F401
 from repro.core.request import Phase, Request  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401

@@ -250,10 +250,15 @@ class CostModel:
         raise NotImplementedError
 
     # --- preemption-cost hooks (§5.4 / Fig. 8) ------------------------- #
-    def recompute_time(self, n_kvs: int) -> float:
-        """Full-refill recompute: one prefill of N tokens (§3 refill —
-        the cost a discard-preempted request pays on re-admission)."""
-        return self.batch_time(BatchSpec(prefills=[(n_kvs, 0)]))
+    def recompute_time(self, n_kvs: int, context: int = 0) -> float:
+        """Refill recompute: one prefill of N tokens (§3 refill — the
+        cost a discard-preempted request pays on re-admission).
+        ``context`` prices a page-level TAIL run: the shed tokens are
+        re-prefilled attending over the kept prefix, so a tail
+        recompute is costlier per token than a from-scratch refill —
+        exactly the asymmetry the per-run swap-vs-recompute crossover
+        must see."""
+        return self.batch_time(BatchSpec(prefills=[(n_kvs, context)]))
 
     def kv_projection_time(self, n_kvs: int) -> float:
         """Activation-cached K/V-projection-only rebuild (Fig. 8's

@@ -1,18 +1,45 @@
-"""Paged KV-cache block allocator (control plane).
+"""Paged KV-cache block allocator (control plane) + shared-prefix page
+registry.
 
-vLLM-style paging adapted to the TPU data plane: the *allocator* is pure
-Python bookkeeping (free list + per-request block tables); the *pools*
-are JAX arrays ``(num_pages, page_size, Hkv, D)`` per layer owned by the
-serving engine.  The allocator enforces exactly the ``sum(m) <= M``
-constraint the scheduler reasons about, at page granularity.
+vLLM-style paging, now REAL: under ``EngineConfig.plane="paged"`` the
+serving engine stores attention KV in shared per-layer page pools
+``(num_pages, page_size, Hkv, D)`` and this allocator's block tables ARE
+the physical page map those pools are indexed with (the Pallas paged
+decode kernel dereferences them via scalar prefetch).  The allocator
+enforces exactly the page-rounded ``sum(m) <= M`` constraint the
+scheduler reasons about — control plane and data plane agree
+page-for-page by construction.
 
-Replacement policy is NOT here — preemption victims are chosen by
-``repro.core.policies``; the engine then calls ``free(rid)``.
+Beyond plain bookkeeping it owns the two mechanisms contiguous slots
+could never express:
+
+* **Refcounted pages + copy-on-write** — a physical page may appear in
+  several block tables (shared-prefix reuse) and/or be pinned by the
+  ``PrefixCache`` registry.  Writers must call :meth:`ensure_private`
+  first; it transparently remaps a shared page to a fresh private one
+  (the caller copies the pool contents).
+* **Partial free** — :meth:`free_tail` releases only a request's tail
+  pages (page-level partial preemption, the §8 replacement idea pushed
+  to sub-request granularity).
+
+The ``PrefixCache`` maps chained page-content hashes to physical pages
+and holds a +1 pin on each registered page so completed requests leave
+their prompt pages behind as a prefix cache.  Pinned-only pages are
+RECLAIMABLE: when the free list runs short, :meth:`PagedAllocator._take`
+evicts registry entries in LRU order (a DBMS-style replacement policy on
+the page pool itself), so cached prefixes never reduce the capacity the
+scheduler may promise to requests — ``OutOfPagesError`` stays
+unreachable on admitted schedules.
+
+Replacement policy for REQUESTS is still not here — preemption victims
+are chosen by ``repro.core.policies``; the engine then calls
+``free(rid)`` / ``free_tail(rid, k)``.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 
 class OutOfPagesError(RuntimeError):
@@ -25,6 +52,66 @@ class BlockTable:
     num_tokens: int = 0  # valid tokens across those pages
 
 
+class PrefixCache:
+    """Chained-hash -> physical page registry with LRU ordering.
+
+    Key ``i`` is a hash over (key ``i-1``, the token ids of page ``i``),
+    so a hit on key ``i`` certifies the whole prefix up to and including
+    page ``i`` matches.  Each entry also stores the page's OWN token ids
+    and ``get`` re-verifies them: Python's 64-bit hash can collide, and
+    a collision served unverified would silently map another prompt's
+    KV pages into the request — the one failure mode the token-identical
+    contract cannot tolerate.  Lookup/insert refresh LRU recency; the
+    allocator evicts from the LRU end when it needs pages back.
+    """
+
+    def __init__(self) -> None:
+        # key -> (page, that page's token ids)
+        self._map: "OrderedDict[int, Tuple[int, Tuple[int, ...]]]" = \
+            OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def __contains__(self, key: int) -> bool:
+        return key in self._map
+
+    def get(self, key: int,
+            tokens: Optional[Sequence[int]] = None) -> Optional[int]:
+        entry = self._map.get(key)
+        if entry is None:
+            return None
+        page, page_tokens = entry
+        if tokens is not None and tuple(tokens) != page_tokens:
+            return None                 # hash collision: NOT a match
+        self._map.move_to_end(key)
+        return page
+
+    def insert(self, key: int, page: int,
+               tokens: Sequence[int] = ()) -> None:
+        assert key not in self._map, key
+        self._map[key] = (page, tuple(tokens))
+
+    def pop_lru(self) -> Tuple[int, int]:
+        key, (page, _) = next(iter(self._map.items()))
+        del self._map[key]
+        return key, page
+
+    @property
+    def pages(self) -> List[int]:
+        return [page for page, _ in self._map.values()]
+
+    @staticmethod
+    def chain_keys(tokens: Sequence[int], page_size: int) -> List[int]:
+        """Chained content hashes for every FULL page of ``tokens``."""
+        keys: List[int] = []
+        prev = 0
+        for i in range(len(tokens) // page_size):
+            prev = hash((prev, tuple(tokens[i * page_size:(i + 1) * page_size])))
+            keys.append(prev)
+        return keys
+
+
 class PagedAllocator:
     def __init__(self, num_pages: int, page_size: int):
         assert num_pages > 0 and page_size > 0
@@ -32,6 +119,16 @@ class PagedAllocator:
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._tables: Dict[int, BlockTable] = {}
+        self._refs: Dict[int, int] = {}     # page -> refcount (tables + pin)
+        self._pinned: Set[int] = set()      # pages pinned by the registry
+        self.prefix_cache = PrefixCache()
+        # bumped on every block-table mutation — lets the engine cache
+        # its device-side block-table upload across decode steps and
+        # invalidate it without tracking call sites by hand
+        self.version = 0
+        self.stats: Dict[str, int] = dict(
+            prefix_hits=0, prefix_shared_tokens=0, cow_copies=0,
+            reclaimed=0)
 
     # ------------------------------------------------------------------ #
     @property
@@ -40,7 +137,14 @@ class PagedAllocator:
 
     @property
     def used_pages(self) -> int:
+        """Physical pages holding live data (tables and/or registry)."""
         return self.num_pages - len(self._free)
+
+    @property
+    def table_pages(self) -> int:
+        """Pages referenced by at least one block table (excludes pages
+        alive only as registry-cached prefixes)."""
+        return len({p for t in self._tables.values() for p in t.pages})
 
     def tokens_capacity(self) -> int:
         return self.num_pages * self.page_size
@@ -55,38 +159,176 @@ class PagedAllocator:
         return rid in self._tables
 
     def pages_needed(self, rid: int, new_tokens: int) -> int:
+        if new_tokens <= 0:
+            return 0
         cur = self._tables.get(rid)
         have = len(cur.pages) * self.page_size - cur.num_tokens if cur else 0
         need_tokens = max(0, new_tokens - have)
         return (need_tokens + self.page_size - 1) // self.page_size
 
-    # ------------------------------------------------------------------ #
-    def allocate(self, rid: int, new_tokens: int) -> List[int]:
-        """Extend rid's table by new_tokens; returns newly granted pages."""
-        need = self.pages_needed(rid, new_tokens)
+    # --- refcount plumbing --------------------------------------------- #
+    def _decref(self, page: int) -> None:
+        self._refs[page] -= 1
+        assert self._refs[page] >= 0, page
+        if self._refs[page] == 0:
+            del self._refs[page]
+            self._free.append(page)
+
+    def _take(self, need: int) -> List[int]:
+        """Pop ``need`` free pages, reclaiming LRU registry entries when
+        the free list runs short — cached prefixes never block a request
+        the scheduler admitted."""
+        while len(self._free) < need and len(self.prefix_cache):
+            _, page = self.prefix_cache.pop_lru()
+            self._pinned.discard(page)
+            self._decref(page)          # frees iff no table still maps it
+            self.stats["reclaimed"] += 1
         if need > len(self._free):
             raise OutOfPagesError(
-                f"rid={rid} needs {need} pages, {len(self._free)} free")
-        tbl = self._tables.setdefault(rid, BlockTable())
+                f"need {need} pages, {len(self._free)} free "
+                f"({len(self.prefix_cache)} cached prefixes left)")
         granted = [self._free.pop() for _ in range(need)]
+        for p in granted:
+            assert p not in self._refs, p
+            self._refs[p] = 1
+        return granted
+
+    # ------------------------------------------------------------------ #
+    def allocate(self, rid: int, new_tokens: int) -> List[int]:
+        """Extend rid's table by new_tokens; returns newly granted pages.
+        A zero-token grant is a NO-OP (no phantom empty table)."""
+        if new_tokens <= 0:
+            return []
+        need = self.pages_needed(rid, new_tokens)
+        if need:
+            # version tracks the PAGE LISTS only: an in-page append
+            # (decode filling its current page) must not invalidate the
+            # engine's cached device block tables
+            self.version += 1
+        granted = self._take(need)
+        tbl = self._tables.setdefault(rid, BlockTable())
         tbl.pages.extend(granted)
         tbl.num_tokens += new_tokens
         return granted
 
+    def share(self, rid: int, pages: Sequence[int], num_tokens: int) -> None:
+        """Map existing (registry-held) pages as the PREFIX of rid's
+        table — shared-prefix reuse.  Only full pages are shareable and
+        the table must be empty (prefix attach happens at first claim)."""
+        assert rid not in self._tables, rid
+        assert num_tokens == len(pages) * self.page_size, \
+            (num_tokens, len(pages), self.page_size)
+        for p in pages:
+            assert self._refs.get(p, 0) > 0, f"page {p} is not live"
+            self._refs[p] += 1
+        self.version += 1
+        self._tables[rid] = BlockTable(list(pages), num_tokens)
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_shared_tokens"] += num_tokens
+
+    def ensure_private(self, rid: int,
+                       page_index: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write guard: before WRITING into table page
+        ``page_index``, remap it to a fresh private page if it is shared
+        (refcount > 1) or registry-pinned.  Returns ``(old, new)`` when a
+        copy is needed (the caller must copy pool contents old -> new),
+        else None."""
+        tbl = self._tables[rid]
+        page = tbl.pages[page_index]
+        if self._refs[page] == 1 and page not in self._pinned:
+            return None
+        self.version += 1
+        new = self._take(1)[0]
+        tbl.pages[page_index] = new
+        self._decref(page)
+        self.stats["cow_copies"] += 1
+        return page, new
+
     def free(self, rid: int) -> int:
-        """Release all pages of rid (preemption/completion). Returns count."""
+        """Release all pages of rid (preemption/completion). Returns count.
+        Registry-pinned pages stay alive as cached prefixes."""
         tbl = self._tables.pop(rid, None)
         if tbl is None:
             return 0
-        self._free.extend(reversed(tbl.pages))
+        self.version += 1
+        for p in reversed(tbl.pages):
+            self._decref(p)
         return len(tbl.pages)
+
+    def free_tail(self, rid: int, npages: int) -> int:
+        """Release only the LAST ``npages`` pages of rid's table
+        (page-level partial preemption).  Returns the tokens removed;
+        the kept pages are full, so the new boundary is page-aligned."""
+        tbl = self._tables[rid]
+        assert 0 < npages <= len(tbl.pages), (rid, npages, len(tbl.pages))
+        self.version += 1
+        removed = tbl.pages[-npages:]
+        del tbl.pages[-npages:]
+        kept_cap = len(tbl.pages) * self.page_size
+        tokens_removed = tbl.num_tokens - min(tbl.num_tokens, kept_cap)
+        tbl.num_tokens = min(tbl.num_tokens, kept_cap)
+        for p in reversed(removed):
+            self._decref(p)
+        if not tbl.pages:
+            del self._tables[rid]
+        return tokens_removed
+
+    # --- shared-prefix registry ---------------------------------------- #
+    def lookup_prefix(self, keys: Sequence[int],
+                      page_tokens: Optional[Sequence[Sequence[int]]] = None
+                      ) -> List[int]:
+        """Physical pages for the LONGEST consecutive run of key hits
+        starting at page 0 (a miss — or a token-verification failure on
+        a hash collision — breaks the chain).  ``page_tokens[i]`` are
+        the token ids of page ``i``, compared against the registry
+        entry's stored tokens when given."""
+        pages: List[int] = []
+        for i, key in enumerate(keys):
+            toks = page_tokens[i] if page_tokens is not None else None
+            page = self.prefix_cache.get(key, toks)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def register_prefix(self, rid: int, keys: Sequence[int],
+                        page_tokens: Sequence[Sequence[int]] = ()
+                        ) -> int:
+        """Publish rid's first ``len(keys)`` table pages under their
+        chained content keys (pin +1 each), storing each page's token
+        ids for collision verification at lookup.  Pages whose key is
+        already cached — including rid's own shared prefix — are
+        skipped.  Returns the number of newly registered pages."""
+        tbl = self._tables[rid]
+        n = min(len(keys), len(tbl.pages))
+        registered = 0
+        for i in range(n):
+            key, page = keys[i], tbl.pages[i]
+            if key in self.prefix_cache or page in self._pinned:
+                continue
+            toks = page_tokens[i] if i < len(page_tokens) else ()
+            self.prefix_cache.insert(key, page, toks)
+            self._pinned.add(page)
+            self._refs[page] += 1
+            registered += 1
+        return registered
 
     # ------------------------------------------------------------------ #
     def check_invariants(self) -> None:
-        held = [p for t in self._tables.values() for p in t.pages]
+        held = sorted(self._refs)
         all_pages = held + self._free
         assert len(all_pages) == self.num_pages, "page leak"
         assert len(set(all_pages)) == self.num_pages, "double allocation"
+        # refcount == table memberships + registry pin, everywhere
+        counts: Dict[int, int] = {}
         for rid, t in self._tables.items():
+            assert t.pages, f"rid {rid}: empty block table"
             cap = len(t.pages) * self.page_size
-            assert 0 <= t.num_tokens <= cap, (rid, t.num_tokens, cap)
+            assert 0 < t.num_tokens <= cap, (rid, t.num_tokens, cap)
+            for p in t.pages:
+                counts[p] = counts.get(p, 0) + 1
+        for p in self._pinned:
+            counts[p] = counts.get(p, 0) + 1
+        assert counts == self._refs, (counts, self._refs)
+        assert self._pinned == set(self.prefix_cache.pages), \
+            (self._pinned, self.prefix_cache.pages)

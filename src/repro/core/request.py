@@ -42,6 +42,20 @@ class Request:
     suspended: bool = False
     suspended_m: int = 0
     swaps: int = 0
+    # --- page-level partial preemption (§8 at sub-request granularity) ---
+    # Under memory pressure a paged scheduler may shed only the victim's
+    # TAIL pages instead of the whole request: ``tail_suspended_m`` tail
+    # tokens live in the host store (page runs) and are restored before
+    # the request's next compute step; a recompute-mode shed simply
+    # lowers ``m`` to the kept page boundary and the tokens rejoin
+    # ``remaining_prefill``.
+    tail_suspended_m: int = 0
+    partial_preemptions: int = 0
+    # tokens that must cross the host link for the CURRENT full suspend
+    # (the device-resident portion only: tail runs shed earlier were
+    # already charged when they left) — drivers price swap-out with this,
+    # and swap-in with ``suspended_m`` (everything comes back).
+    swap_out_m: int = 0
     # --- metrics ---
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -60,8 +74,18 @@ class Request:
         """KVs this request will hold on-device once (re)admitted, before
         processing: swapped-out KVs count — they are restored, not
         recomputed — so schedulers reserve for them and drivers skip the
-        refill."""
-        return self.suspended_m if self.suspended else self.m
+        refill.  Suspended TAIL pages count too: they come back on-device
+        before the request's next compute step."""
+        if self.suspended:
+            return self.suspended_m
+        return self.m + self.tail_suspended_m
+
+    @property
+    def device_kv(self) -> int:
+        """KVs physically on-device RIGHT NOW (idle reservation): a
+        tail-suspended request holds only its kept prefix until the
+        driver restores the tail at its next batch."""
+        return 0 if self.suspended else self.m
 
     @property
     def remaining_prefill(self) -> int:
@@ -113,20 +137,62 @@ class Request:
         them via :meth:`resume` on re-admission.  ``mode="recompute"``
         discards them (the §3 refill pays a full re-prefill).  A request
         with no cached KVs has nothing to swap and falls back to discard.
+
+        Pending tail runs fold into the full suspend: a swap-mode full
+        preemption keeps them in the host store (``suspended_m`` covers
+        device + tail tokens); a recompute-mode one discards everything
+        (the driver must drop the stored runs).
         """
         assert mode in ("recompute", "swap"), mode
         released = self.m
-        if mode == "swap" and self.m > 0:
+        if mode == "swap" and self.m + self.tail_suspended_m > 0:
             self.suspended = True
-            self.suspended_m = self.m
+            self.suspended_m = self.m + self.tail_suspended_m
+            self.swap_out_m = self.m
             self.swaps += 1
         else:
             self.suspended = False
             self.suspended_m = 0
+            self.swap_out_m = 0
+        self.tail_suspended_m = 0
         self.m = 0
         self.running = False
         self.preemptions += 1
         return released
+
+    # --- page-level partial preemption ---------------------------------- #
+    def partial_preempt(self, n_tokens: int, mode: str = "recompute") -> int:
+        """Shed ``n_tokens`` TAIL tokens (whole pages) under memory
+        pressure; the request KEEPS its slot and stays running.
+        ``mode="swap"`` sends the run to host memory (restored before the
+        next compute step); ``mode="recompute"`` re-prefills the tokens
+        later.  Returns the tokens shed."""
+        assert mode in ("recompute", "swap"), mode
+        assert self.running and 0 < n_tokens <= self.m, \
+            (self.rid, self.running, n_tokens, self.m)
+        self.m -= n_tokens
+        self.partial_preemptions += 1
+        if mode == "swap":
+            self.tail_suspended_m += n_tokens
+            self.swaps += 1
+        return n_tokens
+
+    def resume_tail(self) -> int:
+        """Tail swap-in: the driver restored the suspended tail pages.
+        Returns the number of restored tokens."""
+        assert self.tail_suspended_m > 0, self.rid
+        restored = self.tail_suspended_m
+        self.m += restored
+        self.tail_suspended_m = 0
+        return restored
+
+    def drop_tail_run(self, n_tokens: int) -> None:
+        """The driver could not keep a tail run (host store full): those
+        tokens fall back to recompute via ``remaining_prefill``."""
+        assert 0 < n_tokens <= self.tail_suspended_m, \
+            (self.rid, n_tokens, self.tail_suspended_m)
+        self.tail_suspended_m -= n_tokens
+        self.swaps -= 1
 
     def drop_suspended(self) -> None:
         """The driver could not keep the snapshot (host store full): this

@@ -53,12 +53,30 @@ class SchedulerConfig:
     #   auto      — per-victim Fig. 8 decision: swap iff the cost model's
     #               swap_time(m) undercuts its cheapest recompute path
     preempt_mode: str = "recompute"
+    # Allocator granularity.  With page_size > 1 every reservation is
+    # rounded UP to whole pages and the capacity is the allocator's
+    # page-rounded ceil(M/page)*page, so the control plane's sum(m) <= M
+    # agrees with the PagedAllocator page-for-page: OutOfPagesError is
+    # unreachable on admitted schedules (internal fragmentation is
+    # charged, never discovered).
+    page_size: int = 1
+    # Page-level partial preemption (§8 SRF pushed to sub-request
+    # granularity): on memory pressure shed only the victim's TAIL pages
+    # — the Fig. 8 crossover decides swap-vs-recompute per page run.
+    # Requires a paged data plane (the engine enforces plane="paged").
+    partial_preempt: bool = False
 
 
 @dataclass
 class Batch:
     items: List[Tuple[Request, int]] = field(default_factory=list)
     preempted: List[Request] = field(default_factory=list)
+    # page-level partial preemptions decided while building this batch:
+    # (victim, pages shed, tokens shed, "swap" | "recompute").  The
+    # victim KEEPS its slot and stays running; the driver must free /
+    # snapshot exactly those tail pages.
+    partial_preempted: List[Tuple[Request, int, int, str]] = \
+        field(default_factory=list)
 
     @property
     def requests(self) -> List[Request]:
@@ -91,6 +109,7 @@ class Scheduler:
         self.histogram = OutputLengthHistogram() if cfg.use_histogram else None
         # stats
         self.num_preemptions = 0
+        self.num_partial_preempts = 0
         self.num_swaps = 0
         self.num_batches = 0
 
@@ -102,16 +121,36 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     # --- memory accounting ------------------------------------------- #
+    def _round_pages(self, tokens: int) -> int:
+        """Round an occupancy UP to whole allocator pages (page_size=1 is
+        the identity: token-exact accounting)."""
+        pg = self.cfg.page_size
+        if pg <= 1 or tokens <= 0:
+            return max(tokens, 0)
+        return -(-tokens // pg) * pg
+
+    @property
+    def M_eff(self) -> int:
+        """Capacity in page-rounded tokens: ceil(M/page)*page — exactly
+        ``PagedAllocator.tokens_capacity()`` for the allocator the engine
+        builds, so feasibility here IS feasibility there."""
+        return max(self._round_pages(self.cfg.M), self.cfg.page_size)
+
     def _reservation(self, r: Request, c: int = 0) -> int:
-        """Tokens of KV cache this request holds after processing c more.
-        Uses ``resident_kv``: a suspended (swapped-out) candidate's host
-        KVs come back on-device at restore, so they must be reserved."""
+        """Page-rounded tokens of KV cache this request holds after
+        processing c more.  Uses ``resident_kv``: a suspended
+        (swapped-out) candidate's host KVs — full snapshot or tail page
+        runs — come back on-device at restore, so they must be reserved
+        for any batch that processes the request.  Idle (c=0) running
+        requests reserve only what is physically on-device
+        (``device_kv``): a shed tail costs nothing until restored."""
+        occupied = r.device_kv if c == 0 else r.resident_kv + c
         if self.cfg.reserve == "input":
-            return r.resident_kv + c
+            return self._round_pages(occupied)
         if self.cfg.reserve == "peak":
-            return max(r.peak_kv, r.resident_kv + c)
+            return self._round_pages(max(r.peak_kv, occupied))
         if self.cfg.reserve == "context":
-            return self.cfg.S
+            return self._round_pages(self.cfg.S)
         raise ValueError(self.cfg.reserve)
 
     # ------------------------------------------------------------------ #
@@ -173,12 +212,34 @@ class Scheduler:
             # -- step 4: preempt lower-priority requests on memory pressure
             admitted = True
             can_preempt_others = cand.running or cfg.admission_can_preempt
-            while mem + delta > cfg.M:
+            while mem + delta > self.M_eff:
                 victims = ([r for r in self.running
                             if r.rid not in protected and r.rid != cand.rid
                             and order.get(r.rid, 1 << 30) > order[cand.rid]]
                            if can_preempt_others else [])
                 victim = select_victim(cfg.replacement, victims)
+                if (victim is not None and cfg.partial_preempt
+                        and cfg.reserve == "input"):
+                    # page-level partial preemption: shed only the tail
+                    # pages needed to close the deficit; full preemption
+                    # only when the whole victim must go.  Only the
+                    # "input" reserve prices a request by its CURRENT
+                    # occupancy, so only there does shedding k pages
+                    # credit k*page_size back — under "peak"/"context"
+                    # the reservation is m-independent and a partial
+                    # shed frees nothing the accounting can see.
+                    shed = self._partial_preempt(
+                        victim, deficit=mem + delta - self.M_eff)
+                    if shed is not None:
+                        npages, n_tokens, mode = shed
+                        # a shed victim is no longer admittable this
+                        # round (it stays running and CAN be shed again
+                        # for a later candidate — runs stack)
+                        preempted_now.add(victim.rid)
+                        batch.partial_preempted.append(
+                            (victim, npages, n_tokens, mode))
+                        mem -= npages * cfg.page_size
+                        continue
                 if victim is None:
                     if cand.running and cfg.replacement != "pf":
                         mem -= self._reservation(cand, 0)
@@ -221,16 +282,26 @@ class Scheduler:
         cand.predicted_output = pred_o
         # the candidate's demand is capped at S exactly like every running
         # request's below — a long-input candidate can never demand more
-        # than one context window
-        demand = min(cand.input_len + pred_o - 1, self.cfg.S)
+        # than one context window; page-rounded like every reservation
+        demand = self._round_pages(
+            min(cand.input_len + pred_o - 1, self.cfg.S))
         for r in self.running:
             ro = (r.predicted_output if r.predicted_output is not None
                   else self.histogram.predict(r.input_len))
-            demand += min(r.input_len + ro - 1, self.cfg.S)
-        return demand > self.cfg.M
+            demand += self._round_pages(
+                min(r.input_len + ro - 1, self.cfg.S))
+        return demand > self.M_eff
 
     def _preempt(self, victim: Request) -> None:
-        mode = self._preempt_mode_for(victim)
+        if victim.tail_suspended_m > 0:
+            # tail runs already sit in the host store: a recompute-mode
+            # full preemption would discard paid-for transfers and leave
+            # swap counters/charges describing transfers that never
+            # stuck — once any run is host-resident the suspend must
+            # stay a swap (the store-full fallback is the driver's)
+            mode = "swap"
+        else:
+            mode = self._mode_for(victim.m)
         victim.preempt(mode=mode)
         self.num_preemptions += 1
         if victim.suspended:
@@ -239,23 +310,56 @@ class Scheduler:
             self.running.remove(victim)
         self.waiting.append(victim)
 
-    def _preempt_mode_for(self, victim: Request) -> str:
-        """Fig. 8 crossover for ``preempt_mode="auto"``: swap the victim's
-        m KVs iff the host-link transfer undercuts the cheapest
+    def _partial_preempt(self, victim: Request,
+                         deficit: int) -> Optional[Tuple[int, int, str]]:
+        """Shed only the tail pages of ``victim`` needed to close
+        ``deficit`` tokens of memory pressure.  Returns (pages shed,
+        tokens shed, mode) — or None when the whole victim must go
+        (caller falls through to full preemption).  The kept prefix is
+        whole pages, so the new boundary is page-aligned; the Fig. 8
+        crossover prices THIS RUN (its token count, recompute priced
+        against the kept context)."""
+        pg = self.cfg.page_size
+        np_v = -(-victim.m // pg) if victim.m > 0 else 0   # device pages
+        k = min(-(-deficit // pg), np_v)
+        if k <= 0 or k >= np_v:
+            return None            # nothing to shed, or full preemption
+        kept = (np_v - k) * pg
+        n_tokens = victim.m - kept
+        if victim.tail_suspended_m > 0:
+            # runs already in the host store sit ABOVE this one: a
+            # recompute-mode shed below them would leave a gap in the
+            # stored tiling that no restore can bridge — contiguity
+            # forces swap once any run is host-resident (auto is the
+            # only mode that could mix; pure recompute never stores)
+            mode = "swap"
+        else:
+            mode = self._mode_for(n_tokens, context=kept)
+        victim.partial_preempt(n_tokens, mode=mode)
+        self.num_preemptions += 1
+        self.num_partial_preempts += 1
+        if mode == "swap":
+            self.num_swaps += 1
+        return k, n_tokens, mode
+
+    def _mode_for(self, n_tokens: int, context: int = 0) -> str:
+        """Fig. 8 crossover for ``preempt_mode="auto"``: swap ``n_tokens``
+        KVs iff the host-link transfer undercuts the cheapest
         recomputation path the cost model offers (K/V-projection rebuild
-        or full refill).  Without a cost model — or one that does not
-        price swaps — auto degrades to recompute."""
+        or refill prefill — priced against ``context`` kept KVs for a
+        tail run).  Without a cost model — or one that does not price
+        swaps — auto degrades to recompute."""
         mode = self.cfg.preempt_mode
         if mode != "auto":
             return mode
         cm = self.cost_model
-        n = victim.m
-        if cm is None or n <= 0:
+        if cm is None or n_tokens <= 0:
             return "recompute"
-        t_swap = cm.swap_time(n)
+        t_swap = cm.swap_time(n_tokens)
         if t_swap <= 0.0:
             return "recompute"
-        t_rec = min(cm.kv_projection_time(n), cm.recompute_time(n))
+        t_rec = min(cm.kv_projection_time(n_tokens),
+                    cm.recompute_time(n_tokens, context=context))
         return "swap" if t_swap < t_rec else "recompute"
 
     # ------------------------------------------------------------------ #
@@ -276,6 +380,8 @@ def make_scheduler(name: str, M: int, *, S: int = 4096,
                    ranking: str = "arrival",
                    use_histogram: bool = False,
                    preempt_mode: str = "recompute",
+                   page_size: int = 1,
+                   partial_preempt: bool = False,
                    cost_model: Optional["CostModel"] = None) -> Scheduler:
     name = name.lower()
     presets = {
@@ -300,5 +406,6 @@ def make_scheduler(name: str, M: int, *, S: int = 4096,
         reserve, repl = "peak", "pf"   # hypothetical *pf variants
     cfg = SchedulerConfig(M=M, S=S, reserve=reserve, replacement=repl,
                           ranking=ranking, use_histogram=use_histogram,
-                          preempt_mode=preempt_mode, **kw)
+                          preempt_mode=preempt_mode, page_size=page_size,
+                          partial_preempt=partial_preempt, **kw)
     return Scheduler(cfg, cost_model=cost_model)

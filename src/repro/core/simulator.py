@@ -31,13 +31,17 @@ class BatchLog:
     wall_s: float = 0.0         # measured wall time (engine only; the
     #                             simulator advances virtual time and
     #                             leaves this 0)
+    pages_used: int = 0         # physical pages live in the pool after
+    #                             this batch (paged engine only; counts
+    #                             shared pages once — the dedup signal)
 
 
 @dataclass
 class SimResult:
     requests: List[Request]
     batches: List[BatchLog] = field(default_factory=list)
-    num_preemptions: int = 0
+    num_preemptions: int = 0    # full + partial (page-level) preemptions
+    num_partial_preempts: int = 0
     num_swaps: int = 0
 
     # --- aggregate metrics (§5.1) -------------------------------------- #
@@ -149,10 +153,18 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
         # nothing (the victim's transfer happens regardless); they are
         # carried into the next executed batch's virtual time
         out_now = [v for v in batch.preempted if v.suspended]
-        carry_swap_s += sum(cost_model.swap_time(v.suspended_m)
+        # swap_out_m: only the device-resident portion crosses the link
+        # now (tail runs shed earlier were charged when they left)
+        carry_swap_s += sum(cost_model.swap_time(v.swap_out_m)
                             for v in out_now)
         carry_out += len(out_now)
-        carry_preempted += len(batch.preempted)
+        # page-level partial preemptions: swap-mode tail runs are charged
+        # per run (the Fig. 8 crossover already priced them per run)
+        for _, _, n_tokens, mode in batch.partial_preempted:
+            if mode == "swap":
+                carry_swap_s += cost_model.swap_time(n_tokens)
+                carry_out += 1
+        carry_preempted += len(batch.preempted) + len(batch.partial_preempted)
         if not batch.items:
             if i < len(pending):              # blocked: wait for arrivals
                 now = max(now, pending[i].arrival)
@@ -163,14 +175,19 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
                 f"running={len(scheduler.running)})")
 
         spec = _spec_of(batch)
-        # swap-in charges for suspended requests re-admitted here
+        # swap-in charges for suspended requests re-admitted here, and
+        # tail-run restores for partially-shed requests batched again
         swapped_in = [r for r, _ in batch.items if r.suspended]
+        tail_in = [r for r, _ in batch.items if r.tail_suspended_m > 0]
         swap_s = carry_swap_s + sum(cost_model.swap_time(r.suspended_m)
-                                    for r in swapped_in)
+                                    for r in swapped_in) \
+            + sum(cost_model.swap_time(r.tail_suspended_m) for r in tail_in)
         n_out, n_preempted = carry_out, carry_preempted
         carry_swap_s, carry_out, carry_preempted = 0.0, 0, 0
         for r in swapped_in:
             r.resume()
+        for r in tail_in:
+            r.resume_tail()
         dt = cost_model.batch_time(spec) + swap_s
         now += dt
         for r, c in batch.items:
@@ -184,12 +201,13 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
                 num_prefill=len(spec.prefills), num_decode=len(spec.decodes),
                 tokens=spec.total_tokens, kv_used=kv_used,
                 preempted=n_preempted,
-                swapped_out=n_out, swapped_in=len(swapped_in),
+                swapped_out=n_out, swapped_in=len(swapped_in) + len(tail_in),
                 swap_s=swap_s))
     else:
         raise RuntimeError("simulation did not converge (max_batches hit)")
 
     result.num_preemptions = scheduler.num_preemptions
+    result.num_partial_preempts = scheduler.num_partial_preempts
     result.num_swaps = scheduler.num_swaps
     return result
 

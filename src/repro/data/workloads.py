@@ -88,3 +88,38 @@ def longform_like(n: int = 256, *, duration_s: float = 100.0,
     O = np.maximum((_lognormal(rng, 380, 3_800, n) * o_scale), 1).astype(int)
     arrivals = rng.uniform(0.0, duration_s, size=n)
     return _mk(list(zip(I, O, arrivals)), vocab=vocab, seed=seed + 1)
+
+
+def shared_prefix(n: int = 8, *, input_len: int = 32,
+                  prefix_frac: float = 0.75, num_groups: int = 1,
+                  output_len: int = 8, vocab: int = 1000,
+                  stagger: float = 0.0, seed: int = 0) -> List[Request]:
+    """Relational-LLM-style workload: ``num_groups`` groups of requests
+    whose prompts share a common leading prefix of
+    ``round(prefix_frac * input_len)`` tokens (think one system prompt /
+    table schema fanned out over rows), with per-request random
+    suffixes.  This is the workload shared-prefix page reuse exists for:
+    with ``prefix_frac=0.75`` and 8 requests, ~75% of prompt pages
+    dedupe to one physical copy.  Always generates real token ids
+    (engine mode).
+
+    ``stagger`` delays every request after each group's first by that
+    many seconds: the template request prefills (and publishes its
+    prefix pages) one batch ahead of the fan-out, which is the shape
+    real deployments have — the system prompt is in the page registry
+    before the per-row queries arrive.  Prefix reuse is cross-batch:
+    requests co-scheduled into the same prefill batch all miss."""
+    assert 0.0 <= prefix_frac < 1.0
+    rng = np.random.default_rng(seed)
+    plen = int(round(prefix_frac * input_len))
+    prefixes = [rng.integers(0, vocab, size=plen).tolist()
+                for _ in range(num_groups)]
+    out = []
+    for i in range(n):
+        suffix = rng.integers(0, vocab, size=input_len - plen).tolist()
+        prompt = prefixes[i % num_groups] + suffix
+        out.append(Request(rid=i, input_len=input_len,
+                           output_len=output_len,
+                           arrival=0.0 if i < num_groups else stagger,
+                           prompt=prompt))
+    return out

@@ -1,4 +1,12 @@
-"""Jitted wrappers for paged decode attention."""
+"""Jitted wrappers for paged decode attention.
+
+``paged_decode`` is the engine's entry point (PR 4, ``plane="paged"``):
+on TPU it runs the Pallas flash-decoding kernel (scalar-prefetched block
+tables, page-granular DMA); on CPU it lowers to a jit-friendly jnp
+gather over the block table (``ref.paged_decode_reference``) instead of
+interpret-mode Pallas — the interpreter re-traces per grid instance and
+would dominate the offline suite's wall time.  Both read the SAME pooled
+layout ``(num_pages, page_size, Hkv, D)`` through the same tables."""
 from __future__ import annotations
 
 import functools
@@ -7,10 +15,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention.paged_attention import paged_decode_bhd
+from repro.kernels.paged_attention.ref import paged_decode_reference
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def paged_decode(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                 block_tables: jnp.ndarray,
+                 context_lens: jnp.ndarray) -> jnp.ndarray:
+    """Backend-dispatched paged decode: q (B,H,D); pools
+    (P, page, Hkv, D); block_tables (B, npages) int32; context_lens (B,)
+    -> (B,H,D).  Safe to call inside an enclosing jit (the backend check
+    is trace-time static)."""
+    if _on_cpu():
+        return paged_decode_reference(q, k_pool, v_pool,
+                                      block_tables.astype(jnp.int32),
+                                      context_lens.astype(jnp.int32))
+    return paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                  context_lens, interpret=False)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -7,6 +7,7 @@ from repro.serving.engine import (  # noqa: F401
 )
 from repro.serving.swap_store import (  # noqa: F401
     KVSwapStore,
+    PageRunEntry,
     SwapEntry,
     SwapStoreFullError,
 )

@@ -3,24 +3,51 @@ schedules (the "deployment" path of Fig. 1; the simulator is the blue
 path).
 
 The engine drives the unified ``Scheduler`` (Algorithm 1) against an
-actual model.  Token-level memory accounting (the scheduler's M) is
-backed by a ``PagedAllocator``; the data plane stores each request in a
-contiguous cache slot (on TPU, dynamic-slice slots are the idiomatic
-layout — pointer-chasing page tables are a CUDA idiom; see DESIGN.md).
+actual model.  Memory accounting (the scheduler's M) is backed by a
+``PagedAllocator`` at page granularity: the scheduler charges
+page-rounded occupancy against the allocator's page-rounded capacity
+(``ceil(M/page_size)`` pages), so a schedule the control plane admits is
+allocator-feasible by construction — ``OutOfPagesError`` is unreachable,
+internal fragmentation is charged up front, never discovered mid-batch.
 
-Execution plane (PR 2) — shape-stable and batched, selected by
-``EngineConfig.plane``:
+Execution plane — THREE data planes, selected by ``EngineConfig.plane``:
 
-* ``"batched"`` (default) — all prefill work of a scheduler batch runs
-  as rounds of ONE ``prefill_many`` call over the full (nslots, bucket)
-  token grid.  Chunks are padded to a fixed bucket ladder (powers of
-  two up to ``chunk``) and an explicit per-row ``length`` mask is
-  threaded through ``models.model.prefill_chunk`` down to the attention
-  / SSM / RWKV internals, so one compiled XLA signature per bucket
-  serves every chunk size, request count, and prompt length: the number
-  of distinct compiles is a small constant (see
-  ``Engine.num_compiles`` and the compile-count regression test).
-  Inactive rows carry length 0 and are provably inert.
+* ``"batched"`` (default) — per-request contiguous cache slots; all
+  prefill work of a scheduler batch runs as rounds of ONE
+  ``prefill_many`` call over the full (nslots, bucket) token grid.
+  Chunks are padded to a fixed bucket ladder (powers of two up to
+  ``chunk``) and an explicit per-row ``length`` mask is threaded through
+  ``models.model.prefill_chunk`` down to the attention / SSM / RWKV
+  internals, so one compiled XLA signature per bucket serves every
+  chunk size, request count, and prompt length: the number of distinct
+  compiles is a small constant (see ``Engine.num_compiles`` and the
+  compile-count regression test).  Inactive rows carry length 0 and are
+  provably inert.
+* ``"paged"`` — the allocator's block tables become the PHYSICAL memory
+  layout (PR 4): attention KV lives in shared per-layer page pools
+  ``(num_pages, page_size, Hkv, D)`` (``serving.paged_plane``), prefill
+  writes K/V through the block table into owned pages, and decode runs
+  the ``kernels.paged_attention`` flash-decoding Pallas kernel over
+  scalar-prefetched block tables (jnp gather fallback on CPU).  Pooled
+  pages unlock what contiguous slots cannot express:
+
+  - *page-level partial preemption* — on memory pressure the scheduler
+    sheds only a victim's TAIL pages (``SchedulerConfig.
+    partial_preempt``; the §8 SRF idea at sub-request granularity),
+    with the Fig. 8 crossover deciding swap-vs-recompute PER PAGE RUN;
+    swapped runs live in the ``KVSwapStore`` as ``PageRunEntry``s and
+    are restored before the victim's next compute step.
+  - *shared-prefix reuse* — full prompt pages are published to a
+    refcounted prefix registry keyed by chained content hashes; a new
+    request whose prompt matches maps the SAME physical pages
+    (copy-on-write guarded via ``PagedAllocator.ensure_private``) and
+    skips their prefill compute.  Registry-cached pages are reclaimed
+    LRU when the pool runs short, so they never shrink schedulable
+    capacity.
+
+  Sliding-window and SSM/RWKV state is O(1) per request and stays
+  slot-resident: for those families ``plane="paged"`` keeps the batched
+  data plane and retains the page-rounded control plane.
 * ``"legacy"`` — the PR-1 per-request chunk loop with exact (unpadded)
   shapes: every distinct tail length triggers a fresh XLA compile.
   Kept as the honest baseline for ``benchmarks/fig_engine_wall.py``.
@@ -88,11 +115,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import BatchSpec, CostModel
-from repro.core.kvcache import PagedAllocator
+from repro.core.kvcache import PagedAllocator, PrefixCache
 from repro.core.request import Request
 from repro.core.scheduler import Scheduler
 from repro.core.simulator import BatchLog, SimResult
 from repro.models import model as M
+from repro.serving.paged_plane import build_paged_fns, paged_supported
 from repro.serving.serve_step import build_prefill_chunk_fn
 from repro.serving.swap_store import (KVSwapStore, SwapEntry,
                                       SwapStoreFullError)
@@ -111,13 +139,22 @@ class EngineConfig:
     #                                    unbounded); a full store makes the
     #                                    victim fall back to recompute
     check_invariants: bool = True
-    # --- execution plane (PR 2) --------------------------------------- #
+    # --- execution plane (PR 2 / PR 4) --------------------------------- #
     plane: str = "batched"        # "batched" (shape-stable bucketed
-    #                               prefill_many) | "legacy" (PR-1
-    #                               per-request exact-shape chunk loop)
+    #                               prefill_many over contiguous slots)
+    #                             | "paged" (pooled per-layer KV pages +
+    #                               block tables; slot-resident fallback
+    #                               for bounded-state families)
+    #                             | "legacy" (PR-1 per-request
+    #                               exact-shape chunk loop)
+    prefix_sharing: bool = True   # paged plane: map identical full
+    #                               prompt pages to the same physical
+    #                               pages via the refcounted registry
     decode_append: str = "inline"   # "inline" | "deferred" (one cache
     #                                 scatter per step, §Perf cell A)
     async_swap: bool = True       # double-buffered async swap-out D2H
+    #                               (slot planes only: pooled page-run
+    #                               snapshots are synchronous for now)
     min_bucket: int = 8           # smallest tail bucket of the ladder
 
 
@@ -151,7 +188,7 @@ class Engine:
         ecfg = replace(ecfg) if ecfg is not None else EngineConfig()
         if cfg.window:
             ecfg.chunk = min(ecfg.chunk, cfg.window)
-        assert ecfg.plane in ("batched", "legacy"), ecfg.plane
+        assert ecfg.plane in ("batched", "legacy", "paged"), ecfg.plane
         assert ecfg.decode_append in ("inline", "deferred"), ecfg.decode_append
         self.cfg = cfg
         self.ecfg = ecfg
@@ -161,11 +198,38 @@ class Engine:
         if scheduler.cost_model is None:
             scheduler.cost_model = cost_model   # auto preempt-mode pricing
         scheduler.cfg.max_running = ecfg.nslots
-        # init_cache caps the per-slot KV length at cfg.window internally
-        self.cache = M.init_cache(cfg, ecfg.nslots, ecfg.cache_len)
+        # page-rounded capacity: ceil, NOT floor — flooring silently lost
+        # up to page_size-1 tokens of capacity while the scheduler kept
+        # admitting by raw token count, making OutOfPagesError reachable
+        # on schedules the control plane proved feasible.  The scheduler
+        # is told the granularity so both sides round identically.
+        scheduler.cfg.page_size = ecfg.page_size
         self.allocator = PagedAllocator(
-            num_pages=max(1, scheduler.cfg.M // ecfg.page_size),
+            num_pages=max(1, -(-scheduler.cfg.M // ecfg.page_size)),
             page_size=ecfg.page_size)
+        # pooled paged data plane: only unbounded dense-attention
+        # families are pooled; bounded-state families keep slots
+        self._pooled = ecfg.plane == "paged" and paged_supported(cfg)
+        if scheduler.cfg.partial_preempt:
+            assert self._pooled, \
+                "partial_preempt needs the pooled paged data plane"
+        if self._pooled:
+            pg = ecfg.page_size
+            self.max_pages = -(-ecfg.cache_len // pg)
+            pool_shape = (cfg.num_layers, self.allocator.num_pages, pg,
+                          cfg.num_kv_heads, cfg.head_dim_)
+            self.k_pools = jnp.zeros(pool_shape, jnp.dtype(cfg.dtype))
+            self.v_pools = jnp.zeros_like(self.k_pools)
+            self.cache = None
+        else:
+            # init_cache caps the per-slot KV length at cfg.window
+            self.cache = M.init_cache(cfg, ecfg.nslots, ecfg.cache_len)
+        # shared-prefix bookkeeping (pooled plane): chained page keys per
+        # rid and the per-grant data-plane skip from a registry hit
+        self._page_keys_of: Dict[int, List[int]] = {}
+        self._prefix_skip: Dict[int, int] = {}
+        # (allocator version, device array) — see _block_tables_device
+        self._bt_cache: Optional[Tuple[int, jnp.ndarray]] = None
         self.free_slots: List[int] = list(range(ecfg.nslots - 1, -1, -1))
         self.slot_of: Dict[int, int] = {}
         self.token_ids: Dict[int, List[int]] = {}
@@ -264,6 +328,12 @@ class Engine:
         self._jit_fns = [self._prefill_one, self._prefill_many,
                          self._decode_many, self._reset_slot,
                          self._slot_slice, self._slot_write]
+        if self._pooled:
+            pf, df = build_paged_fns(cfg, impl=ecfg.impl,
+                                     moe_impl=ecfg.moe_impl)
+            self._paged_prefill = jax.jit(pf)
+            self._paged_decode = jax.jit(df)
+            self._jit_fns += [self._paged_prefill, self._paged_decode]
 
     @property
     def num_compiles(self) -> int:
@@ -400,6 +470,213 @@ class Engine:
         self.swap_stats["kv_in"] += entry.num_kv
         self.swap_stats["wall_in_s"] += time.perf_counter() - t0
 
+    # --- pooled (paged) swap data plane -------------------------------- #
+    def _check_run_capacity(self, npages: int) -> None:
+        """Raise ``SwapStoreFullError`` from shape metadata BEFORE the
+        D2H page gather — a doomed snapshot must not pay the transfer
+        (mirrors the slot plane's charge-at-enqueue)."""
+        cap = self.swap_store.capacity_bytes
+        if cap is None:
+            return
+        itemsize = jnp.dtype(self.cfg.dtype).itemsize
+        nbytes = 2 * self.cfg.num_layers * npages * self.ecfg.page_size \
+            * self.cfg.num_kv_heads * self.cfg.head_dim_ * itemsize
+        if self.swap_store.nbytes + nbytes > cap:
+            raise SwapStoreFullError(
+                f"page run of {npages} pages ({nbytes}B) over capacity "
+                f"({self.swap_store.nbytes}/{cap}B held)")
+
+    def _snapshot_pages(self, page_ids) -> Dict[str, np.ndarray]:
+        ids = np.asarray(page_ids, np.int32)
+        return {"k": np.asarray(self.k_pools[:, ids]),
+                "v": np.asarray(self.v_pools[:, ids])}
+
+    def _restore_pages(self, page_ids, kv) -> None:
+        ids = jnp.asarray(np.asarray(page_ids, np.int32))
+        self.k_pools = self.k_pools.at[:, ids].set(jnp.asarray(kv["k"]))
+        self.v_pools = self.v_pools.at[:, ids].set(jnp.asarray(kv["v"]))
+
+    def _swap_out_paged(self, victim: Request) -> bool:
+        """Full suspend in the pooled plane: one ``PageRunEntry`` run
+        covering every device page (tail runs shed earlier are already
+        in the store; together they tile [0, suspended_m)).  Returns
+        False when the store is full — the victim (and any stored tail
+        runs) falls back to discard-and-recompute.
+
+        Pooled snapshots are SYNCHRONOUS device_get copies —
+        ``async_swap`` double-buffering currently covers only the slot
+        planes' whole-slot snapshots."""
+        t0 = time.perf_counter()
+        tbl = self.allocator.table(victim.rid)
+        device_tokens = tbl.num_tokens
+        try:
+            self._check_run_capacity(len(tbl.pages))  # before the D2H copy
+            self.swap_store.put_run(victim.rid, start=0,
+                                    num_tokens=device_tokens,
+                                    kv=self._snapshot_pages(tbl.pages))
+        except SwapStoreFullError:
+            # stored tail runs are unrestorable without the device
+            # portion: unwind their swap counts along with this one
+            if self.swap_store.has_runs(victim.rid):
+                for _ in self.swap_store.pop_runs(victim.rid):
+                    victim.swaps -= 1
+                    self.sched.num_swaps -= 1
+                    self.swap_stats["swap_fallbacks"] += 1
+            victim.drop_suspended()
+            self.sched.num_swaps -= 1   # the suspend did not stick
+            self.swap_stats["swap_fallbacks"] += 1
+            self._release(victim.rid)
+            return False
+        self.swap_stats["swap_outs"] += 1
+        self.swap_stats["kv_out"] += device_tokens
+        self.swap_stats["wall_out_s"] += time.perf_counter() - t0
+        self._release(victim.rid)
+        return True
+
+    def _shed_tail(self, r: Request, npages: int, n_tokens: int,
+                   mode: str) -> bool:
+        """Page-level partial preemption: snapshot (swap mode) and free
+        only the victim's last ``npages`` pages.  Returns True iff the
+        run was swapped (caller charges its host-link time); a full
+        store falls back to recompute for this run."""
+        tbl = self.allocator.table(r.rid)
+        start = tbl.num_tokens - n_tokens
+        swapped = False
+        if mode == "swap":
+            t0 = time.perf_counter()
+            try:
+                self._check_run_capacity(npages)   # before the D2H copy
+                self.swap_store.put_run(
+                    r.rid, start=start, num_tokens=n_tokens,
+                    kv=self._snapshot_pages(tbl.pages[-npages:]))
+                swapped = True
+                self.swap_stats["swap_outs"] += 1
+                self.swap_stats["kv_out"] += n_tokens
+                self.swap_stats["wall_out_s"] += time.perf_counter() - t0
+            except SwapStoreFullError:
+                r.drop_tail_run(n_tokens)
+                self.sched.num_swaps -= 1
+                self.swap_stats["swap_fallbacks"] += 1
+                # the failed run sits BELOW every run already stored for
+                # this rid (the tail is shed top-down), so the stored
+                # tiling now has an unrestorable gap: fold those runs
+                # back to recompute too
+                if self.swap_store.has_runs(r.rid):
+                    for run in self.swap_store.pop_runs(r.rid):
+                        r.drop_tail_run(run.num_tokens)
+                        self.sched.num_swaps -= 1
+                        self.swap_stats["swap_fallbacks"] += 1
+        removed = self.allocator.free_tail(r.rid, npages)
+        if self.ecfg.check_invariants:
+            assert removed == n_tokens, (r.rid, removed, n_tokens)
+        return swapped
+
+    def _swap_in_paged(self, r: Request) -> None:
+        """Restore a fully suspended pooled request: fresh pages are
+        allocated and every stored run is scattered back in ascending
+        start order (their page spans tile the table exactly)."""
+        self._restore_runs(r, claim=True, resume=r.resume)
+
+    def _swap_in_tail(self, r: Request) -> None:
+        """Restore a partially shed request's tail runs before its next
+        compute step (the kept prefix never left the device)."""
+        self._restore_runs(r, claim=False, resume=r.resume_tail)
+
+    def _restore_runs(self, r: Request, *, claim: bool, resume) -> None:
+        t0 = time.perf_counter()
+        runs = self.swap_store.pop_runs(r.rid)
+        total = sum(run.num_tokens for run in runs)
+        if claim:
+            self._claim_slot(r.rid, reset=False)
+        self.allocator.allocate(r.rid, total)
+        self._write_runs(r.rid, runs)
+        restored = resume()
+        if self.ecfg.check_invariants:
+            assert restored == total, (r.rid, restored, total)
+        self.swap_stats["swap_ins"] += len(runs)   # run-for-run with outs
+        self.swap_stats["kv_in"] += total
+        self.swap_stats["wall_in_s"] += time.perf_counter() - t0
+
+    def _write_runs(self, rid: int, runs) -> None:
+        pg = self.ecfg.page_size
+        tbl = self.allocator.table(rid)
+        for run in runs:
+            assert run.start % pg == 0, (rid, run.start)
+            p0 = run.start // pg
+            npg = -(-run.num_tokens // pg)
+            self._restore_pages(tbl.pages[p0:p0 + npg], run.kv)
+
+    # --- shared-prefix reuse (pooled plane) ----------------------------- #
+    def _page_keys(self, r: Request) -> List[int]:
+        keys = self._page_keys_of.get(r.rid)
+        if keys is None:
+            keys = PrefixCache.chain_keys(r.prompt, self.ecfg.page_size)
+            self._page_keys_of[r.rid] = keys
+        return keys
+
+    def _page_tokens(self, r: Request, n: int) -> List[Tuple[int, ...]]:
+        """Token ids of the first n full prompt pages (the registry's
+        collision-verification payload)."""
+        pg = self.ecfg.page_size
+        return [tuple(r.prompt[i * pg:(i + 1) * pg]) for i in range(n)]
+
+    def _attach_prefix(self, r: Request, c: int) -> int:
+        """At a fresh claim, map registry-cached pages matching the
+        prompt's leading full pages into r's block table and return the
+        number of tokens whose prefill compute is SKIPPED.  Control
+        plane accounting is untouched (each sharer is charged its full
+        page-rounded occupancy — sharing only ever reduces physical
+        use), so admitted schedules stay allocator-feasible.  At least
+        one granted token is always computed (the emitting batch needs
+        real logits), and only pages wholly inside this grant qualify."""
+        pg = self.ecfg.page_size
+        cap = min(r.input_len - 1, c - 1) // pg
+        if pg <= 1 or cap <= 0:
+            return 0
+        pages = self.allocator.lookup_prefix(self._page_keys(r)[:cap],
+                                             self._page_tokens(r, cap))
+        if not pages:
+            return 0
+        shared = len(pages) * pg
+        self.allocator.share(r.rid, pages, shared)
+        return shared
+
+    def _register_prefix(self, r: Request, m_new: int) -> None:
+        """Publish the now-complete full PROMPT pages to the registry
+        (generated-token pages are never shared)."""
+        n = min(m_new, r.input_len) // self.ecfg.page_size
+        if n > 0 and self.allocator.has(r.rid):
+            self.allocator.register_prefix(r.rid, self._page_keys(r)[:n],
+                                           self._page_tokens(r, n))
+
+    def _cow_guard(self, rid: int, pos: int) -> None:
+        """Copy-on-write: an in-page append at token position ``pos``
+        writes into an existing page — remap + copy it first if shared
+        or registry-pinned (full-page-only sharing makes this rare, but
+        the guard is what makes the sharing SAFE)."""
+        pg = self.ecfg.page_size
+        if pos % pg == 0:
+            return                      # boundary: a fresh private page
+        moved = self.allocator.ensure_private(rid, pos // pg)
+        if moved is not None:
+            old, new = moved
+            self.k_pools = self.k_pools.at[:, new].set(self.k_pools[:, old])
+            self.v_pools = self.v_pools.at[:, new].set(self.v_pools[:, old])
+
+    def _block_tables_device(self) -> jnp.ndarray:
+        """Device-side (nslots, max_pages) block tables, cached against
+        the allocator's mutation version — decode steps that allocated
+        nothing new (in-page appends) skip the host rebuild + upload."""
+        v = self.allocator.version
+        if self._bt_cache is None or self._bt_cache[0] != v:
+            bt = np.zeros((self.ecfg.nslots, self.max_pages), np.int32)
+            for rid, slot in self.slot_of.items():
+                if self.allocator.has(rid):
+                    pages = self.allocator.table(rid).pages
+                    bt[slot, :len(pages)] = pages
+            self._bt_cache = (v, jnp.asarray(bt))
+        return self._bt_cache[1]
+
     def _swap_time(self, n_kvs: int) -> float:
         return self.cost_model.swap_time(n_kvs) if self.cost_model else 0.0
 
@@ -428,15 +705,14 @@ class Engine:
                 final_tok[r.rid] = self._sample(logits)
         return final_tok
 
-    def _run_prefills_batched(self, prefill_items) -> Dict[int, int]:
-        """Shape-stable plane: rounds of one ``prefill_many`` over the
-        full slot grid, sub-chunks padded to the bucket ladder.  Only
+    def _run_prefill_rounds(self, plans, emits, step_fn) -> Dict[int, int]:
+        """Shared bucketed round loop of the batched AND paged planes:
+        one ``step_fn(toks, lens, starts)`` call per round over the full
+        slot grid, sub-chunks padded to the bucket ladder.  Only
         (nslots,) sampled token ids are fetched, and only on rounds
-        where some request finishes its batch allotment."""
+        where some emitting request finishes its batch allotment.
+        ``plans`` rows are [request, slot, next-token cursor, remaining]."""
         nslots = self.ecfg.nslots
-        # [request, slot, next-token cursor, tokens left this batch]
-        plans = [[r, self.slot_of[r.rid], r.m, c] for r, c in prefill_items]
-        emits = {r.rid: r.m + c == r.target_context for r, c in prefill_items}
         final_tok: Dict[int, int] = {}
         while True:
             steps = {p[1]: min(self.ecfg.chunk, p[3])
@@ -446,6 +722,7 @@ class Engine:
             bucket = self._bucket_for(max(steps.values()))
             toks = np.zeros((nslots, bucket), np.int32)
             lens = np.zeros((nslots,), np.int32)
+            starts = np.zeros((nslots,), np.int32)
             finishing: List[Tuple[Request, int]] = []
             for p in plans:
                 r, slot, cursor, rem = p
@@ -454,18 +731,73 @@ class Engine:
                 sc = steps[slot]
                 toks[slot, :sc] = self.token_ids[r.rid][cursor:cursor + sc]
                 lens[slot] = sc
+                starts[slot] = cursor
                 p[2] += sc
                 p[3] -= sc
                 if p[3] == 0:
                     finishing.append((r, slot))
-            tok_ids, self.cache = self._prefill_many(
-                self.params, self.cache, jnp.asarray(toks), jnp.asarray(lens))
+            tok_ids = step_fn(toks, lens, starts)
             if any(emits[r.rid] for r, _ in finishing):
                 host = np.asarray(tok_ids)          # (nslots,) int32 only
                 for r, slot in finishing:
                     if emits[r.rid]:
                         final_tok[r.rid] = int(host[slot])
         return final_tok
+
+    def _run_prefills_batched(self, prefill_items) -> Dict[int, int]:
+        """Shape-stable slot plane: the shared round loop over
+        ``prefill_many`` (starts are implicit in the cache index)."""
+        plans = [[r, self.slot_of[r.rid], r.m, c] for r, c in prefill_items]
+        emits = {r.rid: r.m + c == r.target_context for r, c in prefill_items}
+
+        def step(toks, lens, starts):
+            tok_ids, self.cache = self._prefill_many(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(lens))
+            return tok_ids
+
+        return self._run_prefill_rounds(plans, emits, step)
+
+    def _run_prefills_paged(self, prefill_items) -> Dict[int, int]:
+        """Pooled plane: the shared round loop over ``paged_prefill`` —
+        K/V rows are written through the block table into pooled pages.
+        A grant's leading registry-shared tokens (``_prefix_skip``) are
+        satisfied by page mapping and never computed (the cursor starts
+        past them)."""
+        plans = []
+        for r, c in prefill_items:
+            skip = self._prefix_skip.pop(r.rid, 0)
+            self._cow_guard(r.rid, r.m + skip)
+            plans.append([r, self.slot_of[r.rid], r.m + skip, c - skip])
+        emits = {r.rid: r.m + c == r.target_context for r, c in prefill_items}
+        block_tables = self._block_tables_device()
+
+        def step(toks, lens, starts):
+            tok_ids, self.k_pools, self.v_pools = self._paged_prefill(
+                self.params, self.k_pools, self.v_pools, jnp.asarray(toks),
+                jnp.asarray(starts), jnp.asarray(lens), block_tables)
+            return tok_ids
+
+        return self._run_prefill_rounds(plans, emits, step)
+
+    def _run_decodes_paged(self, decode_items) -> np.ndarray:
+        """One fused decode step over all slots against the pooled KV:
+        scatter the new token's K/V through the block table, then
+        flash-decode over scalar-prefetched pages."""
+        nslots = self.ecfg.nslots
+        toks = np.zeros((nslots,), np.int32)
+        ctx = np.zeros((nslots,), np.int32)
+        active = np.zeros((nslots,), bool)
+        for r, _ in decode_items:
+            slot = self.slot_of[r.rid]
+            toks[slot] = self.token_ids[r.rid][-1]
+            ctx[slot] = r.m
+            active[slot] = True
+        tok_ids, self.k_pools, self.v_pools = self._paged_decode(
+            self.params, self.k_pools, self.v_pools, jnp.asarray(toks),
+            jnp.asarray(ctx), self._block_tables_device(),
+            jnp.asarray(active))
+        return np.asarray(tok_ids)
 
     # ------------------------------------------------------------------ #
     def step(self) -> int:
@@ -477,13 +809,43 @@ class Engine:
         batch = self.sched.get_next_batch()
         swap_s = 0.0
         num_swap_out = num_swap_in = 0
+        # page-level partial preemptions first: chronologically they
+        # precede any later FULL preemption of the same victim, and the
+        # tail pages must be snapshotted before the remainder is
+        for r, npages, n_tokens, mode in batch.partial_preempted:
+            if not r.running:
+                # the victim was ALSO fully preempted later this round.
+                # A swap-mode shed folds into the full suspend: the
+                # full-preempt path below snapshots the WHOLE table
+                # (tail included) as one run, so skip the data movement
+                # but keep the per-run virtual-time charge — the
+                # simulator charges it at shed time too.  A
+                # recompute-mode shed must still come OFF the table so
+                # the full snapshot (or release) matches the request's
+                # reduced bookkeeping (suspended_m excludes it).
+                if mode == "swap":
+                    swap_s += self._swap_time(n_tokens)
+                    num_swap_out += 1
+                else:
+                    removed = self.allocator.free_tail(r.rid, npages)
+                    if self.ecfg.check_invariants:
+                        assert removed == n_tokens, (r.rid, removed,
+                                                     n_tokens)
+                continue
+            if self._shed_tail(r, npages, n_tokens, mode):
+                swap_s += self._swap_time(n_tokens)
+                num_swap_out += 1
         for victim in batch.preempted:
             if victim.suspended:
-                m = victim.suspended_m
-                if self._swap_out(victim):   # False: store full, fell back
+                m = victim.swap_out_m   # device-resident portion only
+                swapper = (self._swap_out_paged if self._pooled
+                           else self._swap_out)
+                if swapper(victim):      # False: store full, fell back
                     swap_s += self._swap_time(m)
                     num_swap_out += 1
             else:
+                if self._pooled:
+                    self.swap_store.discard_runs(victim.rid)
                 self._release(victim.rid)
         if not batch.items:
             # swap-outs still happened: owe their virtual-time charge to
@@ -498,12 +860,17 @@ class Engine:
         self._carry_swap_s, self._carry_out = 0.0, 0
 
         # swap-ins: restore suspended re-admissions before classification
-        # so they re-enter as decodes/short prefills, not full refills
+        # so they re-enter as decodes/short prefills, not full refills;
+        # partially shed requests restore their tail runs the same way
         for r, _ in batch.items:
             if r.suspended:
                 swap_s += self._swap_time(r.suspended_m)
                 num_swap_in += 1
-                self._swap_in(r)
+                (self._swap_in_paged if self._pooled else self._swap_in)(r)
+            elif r.tail_suspended_m > 0:
+                swap_s += self._swap_time(r.tail_suspended_m)
+                num_swap_in += 1
+                self._swap_in_tail(r)
 
         # classify + virtual-time the batch up front
         spec = BatchSpec()
@@ -524,14 +891,25 @@ class Engine:
         if prefill_items:
             for r, c in prefill_items:
                 if r.rid not in self.slot_of:
-                    self._claim_slot(r.rid)
-                self.allocator.allocate(r.rid, c)
-            runner = (self._run_prefills_batched
-                      if self.ecfg.plane == "batched"
-                      else self._run_prefills_legacy)
+                    self._claim_slot(r.rid, reset=not self._pooled)
+                skip = 0
+                if (self._pooled and self.ecfg.prefix_sharing
+                        and r.m == 0 and not self.allocator.has(r.rid)):
+                    skip = self._attach_prefix(r, c)
+                if self._pooled:
+                    self._prefix_skip[r.rid] = skip
+                self.allocator.allocate(r.rid, c - skip)
+            runner = {"batched": self._run_prefills_batched,
+                      "legacy": self._run_prefills_legacy,
+                      "paged": (self._run_prefills_paged if self._pooled
+                                else self._run_prefills_batched)}[
+                                    self.ecfg.plane]
             final_tok = runner(prefill_items)
             for r, c in prefill_items:
+                m_new = r.m + c
                 generated = r.advance(c, self.now)
+                if self._pooled and self.ecfg.prefix_sharing:
+                    self._register_prefix(r, m_new)
                 if generated:
                     tok = final_tok[r.rid]
                     self.outputs[r.rid].append(tok)
@@ -544,17 +922,23 @@ class Engine:
         # ---- decodes (one batched fused step over all slots) ------------ #
         if decode_items:
             nslots = self.ecfg.nslots
-            toks = np.zeros((nslots,), np.int32)
-            mask = np.zeros((nslots,), bool)
             for r, _ in decode_items:
-                slot = self.slot_of[r.rid]
-                toks[slot] = self.token_ids[r.rid][-1]
-                mask[slot] = True
                 self.allocator.allocate(r.rid, 1)
-            tok_ids, self.cache = self._decode_many(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(mask))
-            host = np.asarray(tok_ids)              # (nslots,) int32 only
+                if self._pooled:
+                    self._cow_guard(r.rid, r.m)
+            if self._pooled:
+                host = self._run_decodes_paged(decode_items)
+            else:
+                toks = np.zeros((nslots,), np.int32)
+                mask = np.zeros((nslots,), bool)
+                for r, _ in decode_items:
+                    slot = self.slot_of[r.rid]
+                    toks[slot] = self.token_ids[r.rid][-1]
+                    mask[slot] = True
+                tok_ids, self.cache = self._decode_many(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(mask))
+                host = np.asarray(tok_ids)          # (nslots,) int32 only
             for r, c in decode_items:
                 slot = self.slot_of[r.rid]
                 r.advance(c, self.now)
@@ -581,12 +965,23 @@ class Engine:
             t_start=self.now - dt, t_end=self.now,
             num_prefill=len(spec.prefills), num_decode=len(spec.decodes),
             tokens=spec.total_tokens, kv_used=kv_used,
-            preempted=len(batch.preempted),
+            preempted=len(batch.preempted) + len(batch.partial_preempted),
             swapped_out=num_swap_out, swapped_in=num_swap_in,
-            swap_s=swap_s, wall_s=wall_s))
+            swap_s=swap_s, wall_s=wall_s,
+            pages_used=self.allocator.table_pages))
         return len(batch.items)
 
     def _check_index_sync(self, batch) -> None:
+        if self._pooled:
+            # no device index in the pooled plane: the allocator's token
+            # count is the position book — it must track r.m exactly
+            for r, _ in batch.items:
+                if r.finished or r.rid not in self.slot_of:
+                    continue
+                nt = (self.allocator.table(r.rid).num_tokens
+                      if self.allocator.has(r.rid) else 0)
+                assert nt == r.m, (r.rid, nt, r.m)
+            return
         idx = np.asarray(self.cache["index"])
         for r, _ in batch.items:
             if r.finished or r.rid not in self.slot_of:
@@ -624,6 +1019,7 @@ class Engine:
                 f"swap store leaked rids {self.swap_store.suspended_rids}"
         sim = SimResult(requests=list(requests), batches=self.batch_logs,
                         num_preemptions=self.sched.num_preemptions,
+                        num_partial_preempts=self.sched.num_partial_preempts,
                         num_swaps=self.sched.num_swaps)
         return EngineResult(outputs=dict(self.outputs), metrics=sim,
                             wall_time=self.wall,

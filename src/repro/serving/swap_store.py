@@ -12,6 +12,16 @@ byte accounting, and fail-fast invariants (double-put and missing-pop
 raise).  An optional ``capacity_bytes`` bound models finite host memory;
 exceeding it raises ``SwapStoreFullError`` so callers can fall back to
 discard-and-recompute.
+
+Two entry granularities share the byte budget:
+
+* ``SwapEntry`` — a whole contiguous slot slice (the batched/legacy
+  planes' full suspend).
+* ``PageRunEntry`` — a contiguous run of pool PAGES (the paged plane's
+  §8 page-level partial preemption; also how the paged plane stores a
+  full suspend: one run covering every device page).  Runs for one rid
+  stack as the tail is shed repeatedly and always tile a contiguous
+  span, restored together in ascending-start order.
 """
 from __future__ import annotations
 
@@ -46,6 +56,25 @@ class SwapEntry:
             self.nbytes = _tree_nbytes(self.cache)
 
 
+@dataclass
+class PageRunEntry:
+    """Page-granular snapshot: a contiguous run of a request's KV pages
+    (the §8 partial-preemption unit).  ``kv`` holds the gathered pool
+    pages per layer — ``{"k": (L, n_pages, page, Hkv, D), "v": ...}`` —
+    and ``start`` is the absolute token position of the run's first
+    token (always page-aligned).  Runs for one rid tile [0, suspended
+    tokens) contiguously; only the topmost run may end mid-page."""
+    rid: int
+    start: int
+    num_tokens: int
+    kv: Any
+    nbytes: int = field(default=0)
+
+    def __post_init__(self) -> None:
+        if not self.nbytes:
+            self.nbytes = _tree_nbytes(self.kv)
+
+
 class KVSwapStore:
     """rid -> suspended slot snapshot, with byte accounting."""
 
@@ -53,6 +82,7 @@ class KVSwapStore:
         assert capacity_bytes is None or capacity_bytes > 0
         self.capacity_bytes = capacity_bytes
         self._entries: Dict[int, SwapEntry] = {}
+        self._runs: Dict[int, List[PageRunEntry]] = {}
         self._nbytes = 0
 
     # ------------------------------------------------------------------ #
@@ -97,12 +127,56 @@ class KVSwapStore:
         self._nbytes -= entry.nbytes
         return True
 
+    # --- page-granular runs (partial preemption, §8) ------------------- #
+    def put_run(self, rid: int, start: int, num_tokens: int,
+                kv: Any) -> PageRunEntry:
+        """Suspend one contiguous run of rid's KV pages.  Runs stack:
+        later runs sit BELOW earlier ones (the tail is shed top-down), so
+        entries for a rid always tile a suffix of its context."""
+        assert num_tokens > 0, (rid, num_tokens)
+        entry = PageRunEntry(rid=rid, start=start, num_tokens=num_tokens,
+                             kv=kv)
+        if (self.capacity_bytes is not None
+                and self._nbytes + entry.nbytes > self.capacity_bytes):
+            raise SwapStoreFullError(
+                f"rid {rid} run: {entry.nbytes}B over capacity "
+                f"({self._nbytes}/{self.capacity_bytes}B held)")
+        runs = self._runs.setdefault(rid, [])
+        assert all(r.start != start for r in runs), (rid, start)
+        runs.append(entry)
+        self._nbytes += entry.nbytes
+        return entry
+
+    def pop_runs(self, rid: int) -> List[PageRunEntry]:
+        """Restore ALL of rid's page runs, sorted by ascending start (the
+        order they must be scattered back in)."""
+        runs = self._runs.pop(rid, None)
+        if not runs:
+            raise KeyError(f"rid {rid} has no page runs")
+        self._nbytes -= sum(r.nbytes for r in runs)
+        return sorted(runs, key=lambda r: r.start)
+
+    def discard_runs(self, rid: int) -> int:
+        """Drop rid's page runs without restoring (fallback to
+        recompute).  Returns the number of runs dropped."""
+        runs = self._runs.pop(rid, None)
+        if not runs:
+            return 0
+        self._nbytes -= sum(r.nbytes for r in runs)
+        return len(runs)
+
+    def has_runs(self, rid: int) -> bool:
+        return bool(self._runs.get(rid))
+
+    def run_tokens(self, rid: int) -> int:
+        return sum(r.num_tokens for r in self._runs.get(rid, []))
+
     # ------------------------------------------------------------------ #
     def __len__(self) -> int:
-        return len(self._entries)
+        return len(self._entries) + len(self._runs)
 
     def __contains__(self, rid: int) -> bool:
-        return rid in self._entries
+        return rid in self._entries or rid in self._runs
 
     @property
     def nbytes(self) -> int:
@@ -110,12 +184,21 @@ class KVSwapStore:
 
     @property
     def suspended_rids(self) -> List[int]:
-        return sorted(self._entries)
+        return sorted(set(self._entries) | set(self._runs))
 
     def check_invariants(self) -> None:
-        recount = sum(e.nbytes for e in self._entries.values())
+        recount = sum(e.nbytes for e in self._entries.values()) \
+            + sum(r.nbytes for runs in self._runs.values() for r in runs)
         assert recount == self._nbytes, (recount, self._nbytes)
         if self.capacity_bytes is not None:
             assert self._nbytes <= self.capacity_bytes
         for rid, e in self._entries.items():
             assert rid == e.rid and e.num_kv > 0, (rid, e.rid, e.num_kv)
+        for rid, runs in self._runs.items():
+            assert runs, rid
+            # runs tile a contiguous [min_start, end) span, no overlap
+            spans = sorted((r.start, r.num_tokens) for r in runs)
+            for (s0, n0), (s1, _) in zip(spans, spans[1:]):
+                assert s0 + n0 == s1, (rid, spans)
+            for r in runs:
+                assert r.rid == rid and r.num_tokens > 0, (rid, r)

@@ -12,6 +12,14 @@ sys.path.insert(0, "src")
 from repro.configs import ASSIGNED_ARCHS, get_config  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heaviest cross-plane parity tests — the tier-1 suite "
+        "(plain pytest) always runs them; scripts/check.sh skips them "
+        "by default (CHECK_FULL=1 opts back in)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

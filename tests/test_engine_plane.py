@@ -80,6 +80,7 @@ def test_legacy_plane_recompiles_per_tail():
 # parity: planes and knobs never change tokens
 # --------------------------------------------------------------------- #
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["tinyllama-1.1b", "hymba-1.5b",
                                   "rwkv6-7b"])
 def test_plane_parity_under_preemption(name):

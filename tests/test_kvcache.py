@@ -2,7 +2,7 @@
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.kvcache import OutOfPagesError, PagedAllocator
+from repro.core.kvcache import OutOfPagesError, PagedAllocator, PrefixCache
 
 
 def test_basic_alloc_free():
@@ -35,15 +35,141 @@ def test_pages_never_shared():
     a.check_invariants()
 
 
+def test_zero_grant_is_noop():
+    """allocate(rid, 0) must NOT create a phantom empty BlockTable (the
+    old setdefault did), and empty tables violate the invariants."""
+    a = PagedAllocator(num_pages=4, page_size=4)
+    assert a.allocate(0, 0) == []
+    assert not a.has(0)
+    a.check_invariants()
+    # negative/zero repeatedly, interleaved with real work
+    a.allocate(1, 3)
+    assert a.allocate(1, 0) == []
+    assert a.table(1).num_tokens == 3
+    a.check_invariants()
+    # an empty table smuggled in is rejected
+    from repro.core.kvcache import BlockTable
+    a._tables[9] = BlockTable()
+    with pytest.raises(AssertionError):
+        a.check_invariants()
+    del a._tables[9]
+
+
+def test_free_tail_partial():
+    a = PagedAllocator(num_pages=8, page_size=4)
+    a.allocate(0, 10)                      # 3 pages, last holds 2 tokens
+    assert a.free_tail(0, 1) == 2          # partial page: 2 tokens back
+    assert a.table(0).num_tokens == 8 and len(a.table(0).pages) == 2
+    assert a.free_tail(0, 1) == 4
+    assert a.table(0).num_tokens == 4
+    a.check_invariants()
+    assert a.free_tail(0, 1) == 4          # table empties and disappears
+    assert not a.has(0)
+    assert a.free_pages == 8
+    a.check_invariants()
+
+
+def test_share_refcounts_and_cow():
+    a = PagedAllocator(num_pages=8, page_size=4)
+    pages = a.allocate(0, 8)               # 2 full pages
+    a.share(1, pages, 8)                   # rid 1 maps the same pages
+    assert a.table(1).pages == pages
+    assert a.used_pages == 2               # physically shared
+    a.check_invariants()
+    # CoW: writing into a shared page must remap to a private copy
+    moved = a.ensure_private(1, 0)
+    assert moved is not None and moved[0] == pages[0]
+    assert a.table(1).pages[0] != pages[0]
+    assert a.table(0).pages == pages       # owner untouched
+    a.check_invariants()
+    # private page: no copy needed
+    assert a.ensure_private(1, 0) is None
+    # freeing one sharer keeps the pages for the other
+    a.free(0)
+    assert a.used_pages == 2               # 1 shared page + 1 private copy
+    a.free(1)
+    assert a.free_pages == 8
+    a.check_invariants()
+
+
+def test_prefix_registry_hit_and_lru_reclaim():
+    a = PagedAllocator(num_pages=4, page_size=2)
+    keys = PrefixCache.chain_keys([1, 2, 3, 4], 2)
+    assert len(keys) == 2
+    a.allocate(0, 4)
+    assert a.register_prefix(0, keys) == 2
+    a.free(0)                              # pages survive as cached prefix
+    assert a.used_pages == 2 and a.free_pages == 2
+    # a chain hit maps the longest consecutive run
+    assert a.lookup_prefix(keys) == [a.prefix_cache.get(keys[0]),
+                                     a.prefix_cache.get(keys[1])]
+    bogus = PrefixCache.chain_keys([9, 9, 9, 9], 2)
+    assert a.lookup_prefix(bogus) == []
+    assert a.lookup_prefix([keys[0], bogus[1]]) == \
+        [a.prefix_cache.get(keys[0])]      # miss breaks the chain
+    # pinned-only pages are reclaimed LRU when the pool runs short:
+    # cached prefixes never block an admitted request
+    a.allocate(1, 8)                       # needs all 4 pages
+    assert a.stats["reclaimed"] == 2 and len(a.prefix_cache) == 0
+    a.check_invariants()
+    a.free(1)
+    assert a.free_pages == 4
+
+
+def test_prefix_hit_verifies_tokens_against_hash_collision():
+    """A key hit whose stored page tokens differ (64-bit hash collision)
+    must be treated as a MISS — serving another prompt's KV pages would
+    silently break the token-identical contract."""
+    a = PagedAllocator(num_pages=4, page_size=2)
+    keys = PrefixCache.chain_keys([1, 2], 2)
+    a.allocate(0, 2)
+    a.register_prefix(0, keys, [(1, 2)])
+    a.free(0)
+    assert a.lookup_prefix(keys, [(1, 2)]) != []        # verified hit
+    assert a.lookup_prefix(keys, [(7, 8)]) == []        # collision: miss
+    # unverified lookups (no tokens supplied) keep working
+    assert a.lookup_prefix(keys) != []
+    a.check_invariants()
+
+
+def test_shared_prefix_attach_then_reclaim_keeps_sharer_data():
+    """Evicting a registry entry whose page a live table still maps must
+    NOT free the page out from under the sharer — only pinned-ONLY pages
+    return capacity."""
+    a = PagedAllocator(num_pages=4, page_size=2)
+    keys = PrefixCache.chain_keys([5, 6, 7, 8], 2)
+    a.allocate(0, 4)
+    a.register_prefix(0, keys)
+    a.free(0)                              # both pages cached
+    pages = a.lookup_prefix(keys)
+    a.share(1, pages[:1], 2)               # rid 1 maps only the first
+    a.allocate(2, 6)                       # 3 pages: forces reclaim of
+    #                                        BOTH registry entries
+    assert len(a.prefix_cache) == 0
+    assert a.table(1).pages == pages[:1]   # sharer keeps its page
+    a.check_invariants()
+    # and the shared page only frees once the sharer lets go
+    a.free(2)
+    a.free(1)
+    assert a.free_pages == 4
+
+
 @settings(max_examples=100, deadline=None)
 @given(ops=st.lists(st.tuples(st.integers(0, 5), st.integers(1, 9),
-                              st.booleans()), max_size=60))
+                              st.integers(0, 3)), max_size=60))
 def test_property_no_leaks_no_double_alloc(ops):
-    """Random allocate/free interleavings keep the page set partitioned."""
+    """Random allocate/free/free_tail/register interleavings keep the
+    page set partitioned and refcounts exact."""
     a = PagedAllocator(num_pages=10, page_size=4)
-    for rid, tokens, do_free in ops:
-        if do_free:
+    for rid, tokens, op in ops:
+        if op == 0:
             a.free(rid)
+        elif op == 1 and a.has(rid):
+            a.free_tail(rid, 1)
+        elif op == 2 and a.has(rid):
+            # registry pins under synthetic keys (content irrelevant here)
+            a.register_prefix(rid, [hash((rid, i, len(a.table(rid).pages)))
+                                    for i in range(len(a.table(rid).pages))])
         else:
             try:
                 a.allocate(rid, tokens)
@@ -52,4 +178,11 @@ def test_property_no_leaks_no_double_alloc(ops):
         a.check_invariants()
     for rid in range(6):
         a.free(rid)
+    a.check_invariants()
+    # drain surviving registry pins through the proper reclaim path:
+    # one full-pool allocation evicts every cached prefix
+    a.allocate(99, 40)
+    assert len(a.prefix_cache) == 0
+    a.check_invariants()
+    a.free(99)
     assert a.free_pages == 10

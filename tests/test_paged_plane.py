@@ -1,0 +1,497 @@
+"""``plane="paged"`` invariants (PR 4): page-rounded accounting that
+makes OutOfPagesError unreachable, pooled-KV parity with the batched
+plane and the reference oracle, page-level partial preemption under all
+three preempt modes, shared-prefix page reuse with copy-on-write
+divergence, and allocator/store leak freedom under churn."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (OutOfPagesError, PagedAllocator, Request,
+                        TheoreticalCostModel, get_hardware, make_scheduler)
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.simulator import simulate
+from repro.data.workloads import shared_prefix
+from repro.models import model as M
+from repro.serving import Engine, EngineConfig, generate_reference
+
+RNG = jax.random.PRNGKey(0)
+_CFG_CACHE = {}
+
+
+def build(name="tinyllama-1.1b", M_kv=60, nslots=4, scheduler="vllm",
+          replacement="srf", cache_len=64, chunk=16, S=128,
+          preempt_mode="recompute", partial_preempt=False, **ekw):
+    if name not in _CFG_CACHE:
+        cfg = dataclasses.replace(get_config(name).reduced(),
+                                  dtype="float32")
+        _CFG_CACHE[name] = (cfg, M.init_params(cfg, RNG))
+    cfg, params = _CFG_CACHE[name]
+    sched = make_scheduler(scheduler, M_kv, S=S, replacement=replacement,
+                           preempt_mode=preempt_mode,
+                           partial_preempt=partial_preempt)
+    cm = TheoreticalCostModel(cfg, get_hardware("tpu_v5e"))
+    eng = Engine(cfg, params, sched,
+                 EngineConfig(nslots=nslots, cache_len=cache_len,
+                              chunk=chunk, **ekw),
+                 cost_model=cm)
+    return cfg, params, eng
+
+
+def requests_for(cfg, n=5, seed=0, max_i=25, max_o=9):
+    rs = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        I, O = int(rs.randint(4, max_i)), int(rs.randint(3, max_o))
+        prompt = rs.randint(0, cfg.vocab_size, size=I).tolist()
+        out.append(Request(rid=i, input_len=I, output_len=O,
+                           arrival=0.0, prompt=prompt))
+    return out
+
+
+def assert_reference_parity(cfg, params, requests, outputs, cache_len=64):
+    for r in requests:
+        ref = generate_reference(cfg, params, r.prompt, r.output_len,
+                                 cache_len=cache_len)
+        assert outputs[r.rid] == ref, f"rid={r.rid}"
+
+
+# --------------------------------------------------------------------- #
+# satellite 1: the page-accounting mismatch is fixed
+# --------------------------------------------------------------------- #
+
+def test_page16_accounting_regression():
+    """REGRESSION (fails on the pre-PR-4 engine): with page_size=16 the
+    old ``num_pages = M // page_size`` floor plus raw-token admission
+    made the allocator raise OutOfPagesError on schedules the scheduler
+    proved feasible.  Page-rounded accounting on both sides must run
+    this workload to completion with reference-identical tokens."""
+    cfg, params, eng = build(M_kv=40, page_size=16, plane="paged")
+    assert eng.allocator.num_pages == 3          # ceil(40/16), not floor=2
+    assert eng.sched.cfg.page_size == 16
+    assert eng.sched.M_eff == eng.allocator.tokens_capacity()
+    reqs = [Request(rid=i, input_len=9, output_len=3, arrival=0.0,
+                    prompt=np.random.RandomState(i).randint(
+                        0, cfg.vocab_size, size=9).tolist())
+            for i in range(4)]
+    res = eng.run(reqs)                          # old code: OutOfPagesError
+    assert_reference_parity(cfg, params, reqs, res.outputs)
+
+
+@pytest.mark.parametrize("preempt_mode", ["recompute", "swap", "auto"])
+def test_page16_random_churn_never_out_of_pages(preempt_mode):
+    """Acceptance: page_size=16, randomized admit/preempt/resume churn —
+    OutOfPagesError provably unreachable on admitted schedules."""
+    cfg, params, eng = build(M_kv=70, page_size=16, plane="paged",
+                             partial_preempt=True,
+                             preempt_mode=preempt_mode)
+    reqs = requests_for(cfg, n=8, seed=3, max_i=30, max_o=10)
+    res = eng.run(reqs)                          # must not raise
+    assert res.metrics.num_preemptions > 0       # churn was real
+    assert_reference_parity(cfg, params, reqs, res.outputs)
+
+
+def test_scheduler_admissions_always_allocator_feasible():
+    """Control-plane/allocator agreement at scale, no model compute: a
+    shadow allocator replays every admitted grant; rounding on both
+    sides must make OutOfPagesError literally unreachable."""
+    rs = np.random.RandomState(0)
+    for trial in range(10):
+        pg = int(rs.choice([2, 4, 16]))
+        M_kv = int(rs.randint(40, 120))
+        scfg = SchedulerConfig(M=M_kv, C=64, S=256, chunked=True,
+                               hybrid=True, priority="decode_first",
+                               replacement="srf", page_size=pg,
+                               partial_preempt=bool(trial % 2),
+                               preempt_mode="swap" if trial % 3 else
+                               "recompute")
+        sched = Scheduler(scfg)
+        alloc = PagedAllocator(num_pages=max(1, -(-M_kv // pg)),
+                               page_size=pg)
+        for i in range(12):
+            sched.add_request(Request(
+                rid=i, input_len=int(rs.randint(1, 40)),
+                output_len=int(rs.randint(1, 12)),
+                arrival=float(i % 3)))
+        now, guard = 0.0, 0
+        while sched.has_work() and guard < 4000:
+            guard += 1
+            batch = sched.get_next_batch()
+            for r, npages, n_tokens, _ in batch.partial_preempted:
+                assert alloc.free_tail(r.rid, npages) == n_tokens
+            for victim in batch.preempted:
+                alloc.free(victim.rid)
+            if not batch.items:
+                now += 1.0
+                continue
+            for r, _ in batch.items:
+                if r.suspended:
+                    r.resume()
+                    alloc.allocate(r.rid, r.m)   # must not raise
+                elif r.tail_suspended_m:
+                    alloc.allocate(r.rid, r.resume_tail())
+            for r, c in batch.items:
+                alloc.allocate(r.rid, c)         # must not raise
+                r.advance(c, now)
+                if r.finished:
+                    sched.complete(r)
+                    alloc.free(r.rid)
+            alloc.check_invariants()
+            now += 1.0
+        assert guard < 4000, "scheduler did not converge"
+        assert alloc.used_pages == sum(
+            -(-r.m // pg) for r in sched.running)
+
+
+# --------------------------------------------------------------------- #
+# pooled-plane parity
+# --------------------------------------------------------------------- #
+
+def test_paged_parity_dense():
+    """tinyllama pooled pages vs batched slots under preemption churn:
+    identical tokens, all matching the scheduler-free oracle."""
+    outs = {}
+    for tag, kw in (("batched", dict(plane="batched")),
+                    ("paged", dict(plane="paged", page_size=8))):
+        cfg, params, eng = build(preempt_mode="swap", **kw)
+        reqs = requests_for(cfg)
+        res = eng.run(reqs)
+        assert res.metrics.num_preemptions > 0
+        outs[tag] = res.outputs
+    assert outs["batched"] == outs["paged"]
+    cfg, params, _ = build()
+    assert_reference_parity(cfg, params, requests_for(cfg), outs["paged"])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["hymba-1.5b", "rwkv6-7b"])
+def test_paged_parity_bounded_state_families(name):
+    """Sliding-window / SSM state is slot-resident under plane="paged"
+    (nothing unbounded to page); the page-rounded control plane must
+    still produce identical tokens."""
+    outs = {}
+    for tag, kw in (("batched", dict(plane="batched")),
+                    ("paged", dict(plane="paged", page_size=8))):
+        cfg, params, eng = build(name, preempt_mode="swap", **kw)
+        if tag == "paged":
+            assert not eng._pooled
+        reqs = requests_for(cfg)
+        res = eng.run(reqs)
+        assert res.metrics.num_preemptions > 0
+        outs[tag] = res.outputs
+    assert outs["batched"] == outs["paged"]
+
+
+def test_paged_compile_count_constant():
+    """The pooled plane inherits the batched plane's shape stability:
+    compiles must not grow with workload size or churn."""
+    counts = {}
+    for tag, (n, seed) in {"small": (5, 2), "large": (11, 5)}.items():
+        cfg, params, eng = build(M_kv=50, plane="paged", page_size=8,
+                                 preempt_mode="swap")
+        eng.run(requests_for(cfg, n=n, seed=seed, max_i=40))
+        counts[tag] = eng.num_compiles
+    assert counts["small"] == counts["large"], counts
+    assert counts["small"] <= 10, counts
+
+
+# --------------------------------------------------------------------- #
+# page-level partial preemption
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("preempt_mode", ["recompute", "swap", "auto"])
+def test_partial_preemption_parity(preempt_mode):
+    """Shedding only tail pages — swap or recompute per run — never
+    changes tokens, and the runs really happen."""
+    cfg, params, eng = build(M_kv=72, nslots=4, scheduler="sarathi_cs",
+                             plane="paged", page_size=8,
+                             preempt_mode=preempt_mode,
+                             partial_preempt=True)
+    reqs = requests_for(cfg, n=8, seed=2, max_i=28, max_o=16)
+    res = eng.run(reqs)
+    assert res.metrics.num_partial_preempts > 0, "no partial preemptions"
+    if preempt_mode == "swap":
+        assert res.metrics.num_swaps > 0
+        assert eng.swap_stats["swap_ins"] == eng.swap_stats["swap_outs"] > 0
+    assert len(eng.swap_store) == 0
+    assert_reference_parity(cfg, params, reqs, res.outputs)
+
+
+def test_mixed_mode_sheds_forced_to_swap():
+    """REGRESSION: under preempt_mode="auto" a recompute-mode shed BELOW
+    host-stored swap runs would leave an unrestorable gap in the run
+    tiling (silent garbage KV after restore) — once any run is
+    host-resident, later sheds and the full preempt must stay swaps."""
+    from repro.core.cost_model import CostModel
+
+    class FlippingCM(CostModel):
+        cheap = True
+
+        def swap_time(self, n):
+            return 1e-3 if self.cheap else 1e3
+
+        def kv_projection_time(self, n):
+            return 1.0
+
+        def recompute_time(self, n, context=0):
+            return 1.0
+
+    cm = FlippingCM()
+    sched = Scheduler(SchedulerConfig(M=256, C=64, page_size=8,
+                                      partial_preempt=True,
+                                      preempt_mode="auto"), cost_model=cm)
+    r = Request(rid=0, input_len=32, output_len=8)
+    r.running, r.m = True, 32
+    sched.running.append(r)
+    assert sched._partial_preempt(r, deficit=8)[2] == "swap"
+    cm.cheap = False                    # crossover now favors recompute…
+    assert sched._partial_preempt(r, deficit=8)[2] == "swap"   # …forced
+    assert r.tail_suspended_m == 16 and r.m == 16
+    sched._preempt(r)                   # full preempt likewise forced
+    assert r.suspended and r.suspended_m == 32
+    # without pending runs, auto is free to choose recompute again
+    r2 = Request(rid=1, input_len=32, output_len=8)
+    r2.running, r2.m = True, 32
+    sched.running.append(r2)
+    assert sched._partial_preempt(r2, deficit=8)[2] == "recompute"
+
+
+def test_partial_preemption_in_simulator():
+    """The simulator charges per-run swap time and restores tails — same
+    control plane, virtual time only."""
+    cm = TheoreticalCostModel(
+        dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                            dtype="float32"),
+        get_hardware("tpu_v5e"))
+    for mode in ("recompute", "swap"):
+        sched = make_scheduler("sarathi_cs", 72, S=128, replacement="srf",
+                               preempt_mode=mode, page_size=8,
+                               partial_preempt=True, cost_model=cm)
+        reqs = [Request(rid=i, input_len=10 + 2 * i, output_len=12,
+                        arrival=0.0) for i in range(8)]
+        res = simulate(sched, reqs, cm)
+        assert all(r.finished for r in reqs)
+        assert res.num_partial_preempts > 0
+        if mode == "swap":
+            assert res.num_swaps > 0
+            assert sum(b.swap_s for b in res.batches) > 0
+        assert all(r.tail_suspended_m == 0 for r in reqs)
+
+
+def test_shed_store_full_mid_stack_folds_stored_runs_back():
+    """REGRESSION: when a second (lower) tail run overflows the store,
+    the run(s) already stored above it become unrestorable across the
+    gap — they must fold back to recompute too, or a later restore
+    writes past the block table and silently serves garbage KV."""
+    cfg0 = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                               dtype="float32")
+    run_bytes = 2 * cfg0.num_layers * 8 * cfg0.num_kv_heads \
+        * cfg0.head_dim_ * 4                       # one 8-token page, k+v
+    cfg, params, eng = build(M_kv=400, nslots=4, plane="paged",
+                             page_size=8, preempt_mode="swap",
+                             partial_preempt=True,
+                             swap_bytes=int(run_bytes * 1.5))
+    r = Request(rid=0, input_len=32, output_len=4, arrival=0.0,
+                prompt=np.random.RandomState(0).randint(
+                    0, cfg.vocab_size, size=32).tolist())
+    eng.submit(r)
+    eng.step()                                     # full prefill, m=32
+    # shed page [24, 32): fits the store
+    r.partial_preempt(8, mode="swap")
+    eng.sched.num_swaps += 1
+    assert eng._shed_tail(r, 1, 8, "swap") is True
+    # shed page [16, 24): overflows -> BOTH runs fold to recompute
+    r.partial_preempt(8, mode="swap")
+    eng.sched.num_swaps += 1
+    assert eng._shed_tail(r, 1, 8, "swap") is False
+    assert r.tail_suspended_m == 0 and r.swaps == 0
+    assert not eng.swap_store.has_runs(0)
+    assert eng.sched.num_swaps == 0
+    eng.swap_store.check_invariants()
+    assert r.remaining_prefill == 32 - 16 + 1      # refill covers the gap
+    # the engine finishes the request with reference-identical tokens
+    for _ in range(50):
+        if r.finished:
+            break
+        eng.step()
+    assert r.finished
+    assert eng.outputs[0] == generate_reference(cfg, params, r.prompt,
+                                                r.output_len, cache_len=64)
+
+
+def test_shed_then_full_preempt_same_round_merges_snapshot():
+    """A victim partially shed and THEN fully swap-preempted in the same
+    scheduler round: nothing was freed mid-round, so the full-preempt
+    snapshot covers the whole table (tail included) as ONE run and the
+    restore brings back exactly suspended_m tokens."""
+    cfg, params, eng = build(M_kv=400, nslots=4, plane="paged",
+                             page_size=8, preempt_mode="swap",
+                             partial_preempt=True)
+    r = Request(rid=0, input_len=32, output_len=4, arrival=0.0,
+                prompt=np.random.RandomState(1).randint(
+                    0, cfg.vocab_size, size=32).tolist())
+    eng.submit(r)
+    eng.step()                                     # m=32, one token out
+    # mimic the scheduler's round: shed one page, then full swap preempt
+    r.partial_preempt(8, mode="swap")
+    eng.sched.num_swaps += 1
+    r.preempt(mode="swap")                         # folds tail into full
+    eng.sched.num_swaps += 1
+    eng.sched.running.remove(r)
+    assert r.suspended and r.suspended_m == 32 and r.swap_out_m == 24
+    # engine replay: the partial event is skipped for non-running
+    # victims; the full snapshot covers all 32 tokens in one run
+    assert eng._swap_out_paged(r) is True
+    assert eng.swap_store.run_tokens(0) == 32
+    # restore and run to completion with reference-identical tokens
+    eng.sched.running.append(r)
+    r.running = True
+    eng._swap_in_paged(r)
+    assert r.m == 32 and not r.suspended
+    for _ in range(50):
+        if r.finished:
+            break
+        eng.step()
+    assert r.finished
+    assert eng.outputs[0] == generate_reference(cfg, params, r.prompt,
+                                                r.output_len, cache_len=64)
+
+
+def test_recompute_shed_then_swap_preempt_same_round():
+    """REGRESSION: a recompute-mode shed followed by a swap-mode full
+    preemption of the same victim in one round — the shed tokens must
+    come OFF the block table before the full snapshot, or the stored
+    run covers more tokens than suspended_m and the restore crashes
+    (or silently corrupts position bookkeeping)."""
+    from repro.core.scheduler import Batch
+
+    cfg, params, eng = build(M_kv=400, nslots=4, plane="paged",
+                             page_size=8, preempt_mode="auto",
+                             partial_preempt=True)
+    r = Request(rid=0, input_len=32, output_len=4, arrival=0.0,
+                prompt=np.random.RandomState(2).randint(
+                    0, cfg.vocab_size, size=32).tolist())
+    eng.submit(r)
+    eng.step()                                     # m=32, one token out
+    # mimic auto flipping modes within one round: recompute shed first,
+    # then a swap-mode full preemption (suspended_m excludes the shed)
+    r.partial_preempt(8, mode="recompute")
+    r.preempt(mode="swap")
+    eng.sched.num_swaps += 1
+    eng.sched.running.remove(r)
+    eng.sched.waiting.append(r)
+    assert r.suspended_m == 24
+    crafted = Batch(items=[], preempted=[r],
+                    partial_preempted=[(r, 1, 8, "recompute")])
+    orig = eng.sched.get_next_batch
+    eng.sched.get_next_batch = lambda: crafted
+    eng.step()                 # the REAL replay loop frees the shed tail
+    eng.sched.get_next_batch = orig
+    assert eng.swap_store.run_tokens(0) == 24      # not 32
+    # normal re-admission restores 24 tokens and re-prefills the rest
+    for _ in range(50):
+        if r.finished:
+            break
+        eng.step()
+    assert r.finished
+    assert eng.outputs[0] == generate_reference(cfg, params, r.prompt,
+                                                r.output_len, cache_len=64)
+
+
+def test_block_table_cache_hits_on_in_page_appends():
+    """The device block-table upload is cached against the allocator's
+    page-list version: an in-page append (decode filling its current
+    page) must NOT invalidate it."""
+    cfg, params, eng = build(M_kv=400, nslots=4, plane="paged",
+                             page_size=8)
+    eng.allocator.allocate(0, 8)
+    v0 = eng.allocator.version
+    eng.allocator.allocate(0, 4)       # new page: bumps
+    assert eng.allocator.version == v0 + 1
+    eng.allocator.allocate(0, 2)       # in-page append: no bump
+    assert eng.allocator.version == v0 + 1
+    eng.slot_of[0] = 0
+    bt1 = eng._block_tables_device()
+    assert eng._block_tables_device() is bt1       # cache hit
+    eng.allocator.allocate(0, 4)       # crosses into a new page
+    assert eng._block_tables_device() is not bt1   # invalidated
+    del eng.slot_of[0]
+    eng.allocator.free(0)
+
+
+def test_partial_swap_store_full_falls_back():
+    """A full host store mid-run degrades a swap-mode tail run to
+    recompute — tokens unchanged."""
+    cfg, params, eng = build(M_kv=72, nslots=4, scheduler="sarathi_cs",
+                             plane="paged", page_size=8,
+                             preempt_mode="swap", partial_preempt=True)
+    ref_res = eng.run(requests_for(cfg, n=8, seed=2, max_i=28, max_o=16))
+
+    cfg, params, eng = build(M_kv=72, nslots=4, scheduler="sarathi_cs",
+                             plane="paged", page_size=8,
+                             preempt_mode="swap", partial_preempt=True,
+                             swap_bytes=1)
+    reqs = requests_for(cfg, n=8, seed=2, max_i=28, max_o=16)
+    res = eng.run(reqs)
+    assert eng.swap_stats["swap_fallbacks"] > 0
+    assert res.metrics.num_swaps == 0 and sum(r.swaps for r in reqs) == 0
+    assert res.outputs == ref_res.outputs
+
+
+# --------------------------------------------------------------------- #
+# shared-prefix reuse
+# --------------------------------------------------------------------- #
+
+def test_shared_prefix_dedup_and_cow_divergence():
+    """≥8 requests sharing a 75% prefix: the sharers map the SAME
+    physical pages (measurably fewer resident pages), their outputs
+    diverge correctly after the prefix (suffix tokens land in private
+    pages), and every output matches the oracle."""
+    cfg, params, _ = build()
+    wl_kw = dict(n=8, input_len=32, prefix_frac=0.75, output_len=6,
+                 vocab=cfg.vocab_size, stagger=1e-6, seed=3)
+    peaks, outs = {}, {}
+    for sharing in (False, True):
+        cfg, params, eng = build(M_kv=400, nslots=8, S=512, plane="paged",
+                                 page_size=8, prefix_sharing=sharing)
+        reqs = shared_prefix(**wl_kw)
+        res = eng.run(reqs)
+        peaks[sharing] = max(b.pages_used for b in res.metrics.batches)
+        outs[sharing] = res.outputs
+        if sharing:
+            assert eng.allocator.stats["prefix_hits"] >= 7
+            assert eng.allocator.stats["prefix_shared_tokens"] >= 7 * 24
+        assert_reference_parity(cfg, params, reqs, res.outputs)
+    assert peaks[True] < peaks[False], peaks
+    # sharing changes memory, never tokens
+    assert outs[True] == outs[False]
+    # divergence: same prefix, different generated suffixes across rids
+    assert len({tuple(v) for v in outs[True].values()}) > 1
+
+
+def test_cow_copy_preserves_owner_pages():
+    """Direct CoW exercise at the engine level: forcing a write into a
+    registry-pinned page must copy it, leaving the registry (and any
+    sharer) intact."""
+    cfg, params, eng = build(M_kv=400, nslots=8, S=512, plane="paged",
+                             page_size=8, prefix_sharing=True)
+    r = Request(rid=0, input_len=16, output_len=2, arrival=0.0,
+                prompt=list(range(100, 116)))
+    eng.submit(r)
+    eng.step()                 # full prefill: both prompt pages register
+    pinned = eng.allocator.table(0).pages[1]
+    old_content = np.asarray(eng.k_pools[:, pinned])
+    eng._cow_guard(0, 12)      # mid-page write landing in a pinned page
+    assert eng.allocator.stats["cow_copies"] == 1
+    new_page = eng.allocator.table(0).pages[1]
+    assert new_page != pinned
+    # the writer got a byte-identical private copy; the registry page
+    # (and with it every other sharer) is untouched
+    np.testing.assert_array_equal(
+        np.asarray(eng.k_pools[:, new_page]), old_content)
+    np.testing.assert_array_equal(
+        np.asarray(eng.k_pools[:, pinned]), old_content)
+    eng.allocator.check_invariants()

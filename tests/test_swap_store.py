@@ -89,3 +89,48 @@ def test_random_put_pop_sequences_never_leak(ops):
     for rid in sorted(live):
         store.pop(rid)
     assert len(store) == 0 and store.nbytes == 0
+
+
+# --------------------------------------------------------------------- #
+# page-granular runs (partial preemption, §8)
+# --------------------------------------------------------------------- #
+
+def _run_kv(npages, page=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.standard_normal((2, npages, page, 1, 4)),
+            "v": rng.standard_normal((2, npages, page, 1, 4))}
+
+
+def test_page_runs_stack_and_restore_sorted():
+    store = KVSwapStore()
+    # tail shed top-down: run [8, 10) first, then [4, 8), then full [0, 4)
+    store.put_run(0, start=8, num_tokens=2, kv=_run_kv(1))
+    store.put_run(0, start=4, num_tokens=4, kv=_run_kv(1, seed=1))
+    store.put_run(0, start=0, num_tokens=4, kv=_run_kv(1, seed=2))
+    store.check_invariants()
+    assert store.run_tokens(0) == 10 and store.has_runs(0)
+    runs = store.pop_runs(0)
+    assert [r.start for r in runs] == [0, 4, 8]   # ascending for restore
+    assert len(store) == 0 and store.nbytes == 0
+
+
+def test_page_runs_capacity_shared_with_slot_entries():
+    one = _run_kv(1)
+    nbytes = sum(a.nbytes for a in one.values())
+    store = KVSwapStore(capacity_bytes=int(nbytes * 2.5))
+    store.put_run(0, start=0, num_tokens=4, kv=one)
+    store.put_run(1, start=0, num_tokens=4, kv=_run_kv(1, seed=1))
+    with pytest.raises(SwapStoreFullError):
+        store.put_run(2, start=0, num_tokens=4, kv=_run_kv(1, seed=2))
+    store.check_invariants()
+    assert store.discard_runs(1) == 1
+    store.put_run(2, start=0, num_tokens=4, kv=_run_kv(1, seed=2))
+    store.check_invariants()
+
+
+def test_page_runs_must_tile_contiguously():
+    store = KVSwapStore()
+    store.put_run(0, start=8, num_tokens=4, kv=_run_kv(1))
+    store.put_run(0, start=0, num_tokens=4, kv=_run_kv(1, seed=1))
+    with pytest.raises(AssertionError):   # gap [4, 8) missing
+        store.check_invariants()
