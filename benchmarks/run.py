@@ -21,7 +21,8 @@ from benchmarks import (appa_low_contention, appb_engine_validation,  # noqa: E4
                         appc_ranking, fig04_cost_linearity, fig06_roofline,
                         fig07_slo_pareto, fig08_recompute_vs_swap,
                         fig09_schedulers, fig11_preemption_free,
-                        fig12_vary_m, fig13_csp, fig14_srf, fig_engine_wall,
+                        fig12_vary_m, fig13_csp, fig14_srf,
+                        fig_cache_replacement, fig_engine_wall,
                         fig_prefix_sharing, five_minute_rule, roofline_table)
 
 # (name, module, smoke-mode kwargs).  Modules without a size knob are
@@ -40,6 +41,8 @@ MODULES = [
     ("App B  engine-vs-sim validation", appb_engine_validation, {}),
     ("$Perf  engine wall-time planes", fig_engine_wall, {"smoke": True}),
     ("$Perf  shared-prefix page reuse", fig_prefix_sharing, {"smoke": True}),
+    ("$6/§8  cache replacement + demotion", fig_cache_replacement,
+     {"smoke": True}),
     ("App C  heterogeneous ranking", appc_ranking, {"W": 96}),
     ("$6     five-minute rule", five_minute_rule, {}),
     ("$Roofline table (dry-run artifacts)", roofline_table, {}),

@@ -22,8 +22,18 @@ from repro.core.kvcache import (  # noqa: F401
     OutOfPagesError,
     PagedAllocator,
     PrefixCache,
+    attach_prefix_run,
 )
-from repro.core.policies import group_requests, select_victim  # noqa: F401
+from repro.core.policies import (  # noqa: F401
+    BeladyOraclePolicy,
+    BreakEvenPolicy,
+    LRUPolicy,
+    ReplacementPolicy,
+    belady_future_from_requests,
+    group_requests,
+    make_replacement_policy,
+    select_victim,
+)
 from repro.core.request import Phase, Request  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
     Batch,
@@ -31,5 +41,11 @@ from repro.core.scheduler import (  # noqa: F401
     SchedulerConfig,
     make_scheduler,
 )
-from repro.core.simulator import SimResult, fresh_requests, run_sim, simulate  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    PrefixTierSim,
+    SimResult,
+    fresh_requests,
+    run_sim,
+    simulate,
+)
 from repro.core.slo import pareto_curve  # noqa: F401

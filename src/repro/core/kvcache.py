@@ -26,10 +26,25 @@ The ``PrefixCache`` maps chained page-content hashes to physical pages
 and holds a +1 pin on each registered page so completed requests leave
 their prompt pages behind as a prefix cache.  Pinned-only pages are
 RECLAIMABLE: when the free list runs short, :meth:`PagedAllocator._take`
-evicts registry entries in LRU order (a DBMS-style replacement policy on
-the page pool itself), so cached prefixes never reduce the capacity the
-scheduler may promise to requests — ``OutOfPagesError`` stays
-unreachable on admitted schedules.
+walks the registry in the eviction order of a PLUGGABLE
+``policies.ReplacementPolicy`` (``lru``, ``break_even`` — the §6
+five-minute rule scored per entry by break-even residency vs observed
+idle time — or ``belady-oracle`` for offline ablation), so cached
+prefixes never reduce the capacity the scheduler may promise to
+requests — ``OutOfPagesError`` stays unreachable on admitted schedules.
+Entries whose page a live block table still maps are SKIPPED (evicting
+them frees no memory — it would only burn the registry entry; the
+pre-fix bug did exactly that) and counted in ``stats["reclaim_skipped"]``.
+
+Eviction feeds an optional ``on_evict`` hook BEFORE the page returns to
+the free list: drivers use it to DEMOTE the evicted KV to a host tier
+(``serving.swap_store.PrefixPageEntry``) instead of discarding it.  A
+later registry miss that hits the host tier PROMOTES the page back
+through :meth:`promote_prefix` (one fresh page, re-pinned, re-keyed) —
+:func:`attach_prefix_run` implements that two-tier lookup for both the
+serving engine (real pool copies) and the simulator's virtual-time
+shadow, so every KV access resolves along the Fig. 8 spectrum:
+GPU-resident < host swap-in < recompute.
 
 Replacement policy for REQUESTS is still not here — preemption victims
 are chosen by ``repro.core.policies``; the engine then calls
@@ -39,7 +54,10 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Set,
+                    Tuple)
+
+from repro.core.policies import LRUPolicy, ReplacementPolicy
 
 
 class OutOfPagesError(RuntimeError):
@@ -53,7 +71,8 @@ class BlockTable:
 
 
 class PrefixCache:
-    """Chained-hash -> physical page registry with LRU ordering.
+    """Chained-hash -> physical page registry with a pluggable
+    replacement policy.
 
     Key ``i`` is a hash over (key ``i-1``, the token ids of page ``i``),
     so a hit on key ``i`` certifies the whole prefix up to and including
@@ -61,13 +80,16 @@ class PrefixCache:
     and ``get`` re-verifies them: Python's 64-bit hash can collide, and
     a collision served unverified would silently map another prompt's
     KV pages into the request — the one failure mode the token-identical
-    contract cannot tolerate.  Lookup/insert refresh LRU recency; the
-    allocator evicts from the LRU end when it needs pages back.
+    contract cannot tolerate.  Entries carry their chain depth ``n_kvs``
+    (the prefix length the page terminates) — the break-even policy's
+    Eq. 5 input.  Lookup/insert feed the policy's recency; the allocator
+    evicts in ``eviction_order`` when it needs pages back.
     """
 
-    def __init__(self) -> None:
-        # key -> (page, that page's token ids)
-        self._map: "OrderedDict[int, Tuple[int, Tuple[int, ...]]]" = \
+    def __init__(self, policy: Optional[ReplacementPolicy] = None) -> None:
+        self.policy = policy if policy is not None else LRUPolicy()
+        # key -> (page, that page's token ids, chain depth in tokens)
+        self._map: "OrderedDict[int, Tuple[int, Tuple[int, ...], int]]" = \
             OrderedDict()
 
     def __len__(self) -> int:
@@ -76,30 +98,49 @@ class PrefixCache:
     def __contains__(self, key: int) -> bool:
         return key in self._map
 
-    def get(self, key: int,
-            tokens: Optional[Sequence[int]] = None) -> Optional[int]:
+    def get(self, key: int, tokens: Optional[Sequence[int]] = None,
+            now: float = 0.0) -> Optional[int]:
         entry = self._map.get(key)
         if entry is None:
             return None
-        page, page_tokens = entry
+        page, page_tokens, _ = entry
         if tokens is not None and tuple(tokens) != page_tokens:
             return None                 # hash collision: NOT a match
         self._map.move_to_end(key)
+        self.policy.record_hit(key, now)
         return page
 
-    def insert(self, key: int, page: int,
-               tokens: Sequence[int] = ()) -> None:
-        assert key not in self._map, key
-        self._map[key] = (page, tuple(tokens))
+    def insert(self, key: int, page: int, tokens: Sequence[int] = (),
+               n_kvs: int = 0, now: float = 0.0) -> None:
+        if key in self._map:
+            # a silent re-register would leak the old page's +1 pin (and
+            # under ``python -O`` a bare assert would not even fire)
+            raise ValueError(
+                f"prefix key {key} already registered "
+                f"(page {self._map[key][0]})")
+        self._map[key] = (page, tuple(tokens), int(n_kvs))
+        self.policy.record_insert(key, n_kvs, now)
 
-    def pop_lru(self) -> Tuple[int, int]:
-        key, (page, _) = next(iter(self._map.items()))
-        del self._map[key]
-        return key, page
+    def entry(self, key: int) -> Tuple[int, Tuple[int, ...], int]:
+        """(page, tokens, n_kvs) of a registered key."""
+        return self._map[key]
+
+    def remove(self, key: int) -> Tuple[int, Tuple[int, ...], int]:
+        entry = self._map.pop(key)
+        self.policy.record_remove(key)
+        return entry
+
+    def eviction_order(self, now: float = 0.0) -> List[int]:
+        """All keys, most-evictable first, per the installed policy."""
+        return self.policy.eviction_order(now)
 
     @property
     def pages(self) -> List[int]:
-        return [page for page, _ in self._map.values()]
+        return [page for page, _, _ in self._map.values()]
+
+    def check_invariants(self) -> None:
+        assert set(self._map) == set(self.policy._seq), \
+            "policy metadata out of sync with registry entries"
 
     @staticmethod
     def chain_keys(tokens: Sequence[int], page_size: int) -> List[int]:
@@ -113,7 +154,11 @@ class PrefixCache:
 
 
 class PagedAllocator:
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 policy: Optional[ReplacementPolicy] = None,
+                 on_evict: Optional[
+                     Callable[[int, int, Tuple[int, ...], int], None]]
+                 = None):
         assert num_pages > 0 and page_size > 0
         self.num_pages = num_pages
         self.page_size = page_size
@@ -121,14 +166,22 @@ class PagedAllocator:
         self._tables: Dict[int, BlockTable] = {}
         self._refs: Dict[int, int] = {}     # page -> refcount (tables + pin)
         self._pinned: Set[int] = set()      # pages pinned by the registry
-        self.prefix_cache = PrefixCache()
+        self.prefix_cache = PrefixCache(policy)
+        # demotion hook: called as (key, page, page tokens, chain depth)
+        # BEFORE an evicted page returns to the free list, while its
+        # pool contents are still intact — drivers snapshot it to the
+        # host tier here
+        self.on_evict = on_evict
+        # virtual-time clock the replacement policy scores against;
+        # drivers (engine / simulator shadow) keep it current
+        self.now = 0.0
         # bumped on every block-table mutation — lets the engine cache
         # its device-side block-table upload across decode steps and
         # invalidate it without tracking call sites by hand
         self.version = 0
         self.stats: Dict[str, int] = dict(
             prefix_hits=0, prefix_shared_tokens=0, cow_copies=0,
-            reclaimed=0)
+            reclaimed=0, reclaim_skipped=0)
 
     # ------------------------------------------------------------------ #
     @property
@@ -175,18 +228,37 @@ class PagedAllocator:
             self._free.append(page)
 
     def _take(self, need: int) -> List[int]:
-        """Pop ``need`` free pages, reclaiming LRU registry entries when
-        the free list runs short — cached prefixes never block a request
-        the scheduler admitted."""
-        while len(self._free) < need and len(self.prefix_cache):
-            _, page = self.prefix_cache.pop_lru()
-            self._pinned.discard(page)
-            self._decref(page)          # frees iff no table still maps it
-            self.stats["reclaimed"] += 1
+        """Pop ``need`` free pages, reclaiming registry entries in the
+        replacement policy's eviction order when the free list runs
+        short — cached prefixes never block a request the scheduler
+        admitted.
+
+        Candidates whose page a live block table still maps are SKIPPED:
+        their pin drop would free nothing, so evicting them only burns
+        the registry entry (the pre-fix behaviour — under heavy sharing
+        it could strip the whole prefix cache while reclaiming zero
+        pages).  Each genuinely evicted entry is offered to ``on_evict``
+        (host demotion) before its page returns to the free list, and
+        only those count as ``reclaimed``."""
+        if len(self._free) < need and len(self.prefix_cache):
+            for key in self.prefix_cache.eviction_order(self.now):
+                if len(self._free) >= need:
+                    break
+                page, tokens, n_kvs = self.prefix_cache.entry(key)
+                if self._refs[page] > 1:      # pin + live table mapping(s)
+                    self.stats["reclaim_skipped"] += 1
+                    continue
+                self.prefix_cache.remove(key)
+                self._pinned.discard(page)
+                if self.on_evict is not None:
+                    self.on_evict(key, page, tokens, n_kvs)
+                self._decref(page)            # pin was the only ref: frees
+                self.stats["reclaimed"] += 1
         if need > len(self._free):
             raise OutOfPagesError(
                 f"need {need} pages, {len(self._free)} free "
-                f"({len(self.prefix_cache)} cached prefixes left)")
+                f"({len(self.prefix_cache)} cached prefixes left, "
+                f"none evictable)")
         granted = [self._free.pop() for _ in range(need)]
         for p in granted:
             assert p not in self._refs, p
@@ -224,6 +296,21 @@ class PagedAllocator:
         self.version += 1
         self._tables[rid] = BlockTable(list(pages), num_tokens)
         self.stats["prefix_hits"] += 1
+        self.stats["prefix_shared_tokens"] += num_tokens
+
+    def extend_shared(self, rid: int, page: int, num_tokens: int) -> None:
+        """Append ONE live (registry-held) page to the tail of rid's
+        table — the host-promotion path of a prefix attach extends the
+        run page by page.  The table must be whole full pages so far."""
+        tbl = self._tables[rid]
+        assert num_tokens == self.page_size, num_tokens
+        assert tbl.num_tokens == len(tbl.pages) * self.page_size, \
+            (rid, tbl.num_tokens, len(tbl.pages))
+        assert self._refs.get(page, 0) > 0, f"page {page} is not live"
+        self._refs[page] += 1
+        self.version += 1
+        tbl.pages.append(page)
+        tbl.num_tokens += num_tokens
         self.stats["prefix_shared_tokens"] += num_tokens
 
     def ensure_private(self, rid: int,
@@ -285,7 +372,7 @@ class PagedAllocator:
         pages: List[int] = []
         for i, key in enumerate(keys):
             toks = page_tokens[i] if page_tokens is not None else None
-            page = self.prefix_cache.get(key, toks)
+            page = self.prefix_cache.get(key, toks, now=self.now)
             if page is None:
                 break
             pages.append(page)
@@ -296,9 +383,10 @@ class PagedAllocator:
                         ) -> int:
         """Publish rid's first ``len(keys)`` table pages under their
         chained content keys (pin +1 each), storing each page's token
-        ids for collision verification at lookup.  Pages whose key is
-        already cached — including rid's own shared prefix — are
-        skipped.  Returns the number of newly registered pages."""
+        ids for collision verification at lookup and its chain depth
+        for the break-even policy.  Pages whose key is already cached —
+        including rid's own shared prefix — are skipped.  Returns the
+        number of newly registered pages."""
         tbl = self._tables[rid]
         n = min(len(keys), len(tbl.pages))
         registered = 0
@@ -307,11 +395,26 @@ class PagedAllocator:
             if key in self.prefix_cache or page in self._pinned:
                 continue
             toks = page_tokens[i] if i < len(page_tokens) else ()
-            self.prefix_cache.insert(key, page, toks)
+            self.prefix_cache.insert(key, page, toks,
+                                     n_kvs=(i + 1) * self.page_size,
+                                     now=self.now)
             self._pinned.add(page)
             self._refs[page] += 1
             registered += 1
         return registered
+
+    def promote_prefix(self, key: int, tokens: Sequence[int],
+                       n_kvs: int) -> int:
+        """Re-admit a host-demoted prefix page: take one page (this may
+        itself reclaim/demote colder entries) and register it under its
+        chain key as pinned-only.  The caller writes the host snapshot
+        into the returned page and charges the swap-in."""
+        page = self._take(1)[0]
+        # _take set refs[page] = 1 — here that single ref IS the pin
+        self.prefix_cache.insert(key, page, tokens, n_kvs=n_kvs,
+                                 now=self.now)
+        self._pinned.add(page)
+        return page
 
     # ------------------------------------------------------------------ #
     def check_invariants(self) -> None:
@@ -332,3 +435,66 @@ class PagedAllocator:
         assert counts == self._refs, (counts, self._refs)
         assert self._pinned == set(self.prefix_cache.pages), \
             (self._pinned, self.prefix_cache.pages)
+        self.prefix_cache.check_invariants()
+
+
+# --------------------------------------------------------------------- #
+# two-tier prefix attach (device registry, then host demotion tier)
+# --------------------------------------------------------------------- #
+
+
+def attach_prefix_run(alloc: PagedAllocator, rid: int,
+                      keys: Sequence[int],
+                      page_tokens: Sequence[Sequence[int]],
+                      host_tier: Any = None,
+                      restore: Optional[Callable[[int, Any], None]] = None
+                      ) -> Tuple[int, int]:
+    """Map the longest consecutive run of cached prefix pages starting
+    at page 0 into rid's (empty) block table, resolving each chain key
+    first against the DEVICE registry, then — when ``host_tier`` is
+    given — against host-demoted ``PrefixPageEntry`` snapshots, which
+    are PROMOTED back: one fresh page taken (possibly demoting colder
+    entries), re-registered under the key, and filled via ``restore(page,
+    entry.kv)``.  Every attached page is mapped into the table (and so
+    refcount-protected) before the next key is resolved — a promotion's
+    own reclaim can never evict pages of the run being built.
+
+    Returns ``(attached_tokens, promoted_tokens)``; the caller charges
+    ``swap_time(promoted_tokens)`` — the Fig. 8 host-link price of the
+    promotions.  Shared by the serving engine (real pool copies) and the
+    simulator's virtual-time shadow (``restore=None``).
+    """
+    pg = alloc.page_size
+    attached = promoted = 0
+    for i, key in enumerate(keys):
+        toks = page_tokens[i]
+        page = alloc.prefix_cache.get(key, toks, now=alloc.now)
+        from_host = False
+        if page is None and host_tier is not None \
+                and key not in alloc.prefix_cache:
+            # the `not in` guard closes a collision corner: if the key
+            # IS device-registered but under different tokens (a 64-bit
+            # hash collision), promoting the host copy would try to
+            # re-insert the key — a collision must degrade to a miss,
+            # never an error (and never another prompt's KV)
+            entry = host_tier.peek_prefix(key, toks)
+            if entry is not None:
+                try:
+                    page = alloc.promote_prefix(key, entry.tokens,
+                                                entry.n_kvs)
+                except OutOfPagesError:
+                    break               # nothing evictable: stop the run
+                host_tier.pop_prefix(key)
+                if restore is not None:
+                    restore(page, entry.kv)
+                from_host = True
+        if page is None:
+            break
+        if attached == 0:
+            alloc.share(rid, [page], pg)
+        else:
+            alloc.extend_shared(rid, page, pg)
+        attached += pg
+        if from_host:
+            promoted += pg
+    return attached, promoted

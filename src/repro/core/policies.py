@@ -1,4 +1,5 @@
-"""Cache-insertion priorities and cache-replacement (preemption) policies.
+"""Cache-insertion priorities and cache-replacement policies — for
+REQUESTS (preemption victims) and for the PAGE POOL's prefix registry.
 
 Insertion (GROUPREQUESTS, Table 2):
   * ``prefill_first`` — vLLM: {R_w, R_r}
@@ -7,17 +8,36 @@ Within each group requests are ordered by a ranking key:
   * ``arrival`` (FCFS, default), ``input`` (Rank_I), ``output`` (Rank_O —
     hypothetical: reads r.output_len).
 
-Replacement (victim selection on memory pressure):
+Request replacement (victim selection on memory pressure):
   * ``nrf`` — newest request first (vLLM/Sarathi default)
   * ``srf`` — shortest request first: preempt the request with the fewest
     cached tokens m (the paper's contribution, §8)
   * ``lrf`` — longest request first (ablation / anti-policy)
   * ``pf``  — preemption-free: never select a victim (callers must reserve
     peak memory up front)
+
+Page-pool replacement (``ReplacementPolicy``, the §6 five-minute-rule
+contribution): when the free list runs short the ``PagedAllocator``
+reclaims cached-prefix registry entries in the order a pluggable policy
+ranks them:
+
+  * ``lru``          — least-recently-used entry first (the pre-policy
+    hard-wired behaviour; hit-rate-blind under skewed popularity)
+  * ``break_even``   — Gray/Putzolu Eq. 5 applied per entry: score each
+    cached prefix page by observed idle time over its break-even
+    residency interval ``break_even_interval(model, n_kvs, M)``.  The
+    interval FALLS with chain depth (weight-load amortizes), so at equal
+    idle time LONG prefixes evict sooner — exactly the paper's
+    prediction — while frequently-hit short prefixes survive scans that
+    flush LRU.
+  * ``belady-oracle``— evict the entry whose next access lies farthest
+    in the future (offline ablation; needs the workload's future access
+    times, e.g. ``belady_future_from_requests``).
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Optional, Sequence
+import bisect
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.request import Phase, Request
 
@@ -68,3 +88,172 @@ def select_victim(policy: str, candidates: Sequence[Request]
     if policy == "lrf":
         return max(candidates, key=lambda r: (r.m, r.arrival, r.rid))
     raise ValueError(f"unknown replacement policy {policy!r}")
+
+
+# --------------------------------------------------------------------- #
+# page-pool replacement (§6 five-minute rule on the prefix registry)
+# --------------------------------------------------------------------- #
+
+
+class ReplacementPolicy:
+    """Eviction ranking over cached-prefix registry entries.
+
+    The ``PrefixCache`` feeds every insert/hit/remove through the policy;
+    ``eviction_order(now)`` returns ALL tracked keys, most-evictable
+    first.  Drivers walk that order and skip entries whose page a live
+    block table still maps (evicting those frees nothing).  Higher
+    :meth:`rank` = evict earlier; ties break on insertion order, then
+    key, so the order is fully deterministic.
+    """
+
+    name = "base"
+
+    def __init__(self) -> None:
+        self._seq: Dict[int, int] = {}   # key -> insertion sequence no.
+        self._n = 0
+
+    def record_insert(self, key: int, n_kvs: int, now: float) -> None:
+        self._n += 1
+        self._seq[key] = self._n
+
+    def record_hit(self, key: int, now: float) -> None:
+        pass
+
+    def record_remove(self, key: int) -> None:
+        self._seq.pop(key, None)
+
+    def rank(self, key: int, now: float) -> float:  # pragma: no cover
+        raise NotImplementedError
+
+    def eviction_order(self, now: float) -> List[int]:
+        return sorted(self._seq,
+                      key=lambda k: (-self.rank(k, now), self._seq[k], k))
+
+    def __len__(self) -> int:
+        return len(self._seq)
+
+
+class LRUPolicy(ReplacementPolicy):
+    """Least-recently-used: insert and hit both refresh recency."""
+
+    name = "lru"
+
+    def record_hit(self, key: int, now: float) -> None:
+        self._n += 1
+        self._seq[key] = self._n
+
+    def rank(self, key: int, now: float) -> float:
+        return -float(self._seq[key])
+
+
+class BreakEvenPolicy(ReplacementPolicy):
+    """Five-minute-rule replacement (paper §6, Eq. 5).
+
+    Each entry carries its chain depth ``n_kvs`` (the prefix length the
+    page terminates, in tokens).  Break-even residency
+    ``B(n) = t_regen(n)/n * M`` falls with ``n`` — regenerating a long
+    prefix is cheap PER KV because the weight-load cost amortizes — so
+    the score ``idle / B(n)`` evicts the entry whose expected
+    regeneration cost per freed page is lowest: long cold prefixes go
+    first, frequently-hit short prefixes stay resident well past an LRU
+    horizon.  ``mode`` selects which regeneration path prices ``B``
+    (``kv_projection`` — Fig. 8's activation-cached rebuild — ``full``,
+    or ``swap`` when a host demotion tier makes the swap-in the actual
+    regeneration cost).
+    """
+
+    name = "break_even"
+
+    def __init__(self, cost_model, M: int, *,
+                 mode: str = "kv_projection") -> None:
+        super().__init__()
+        assert cost_model is not None and M > 0, (cost_model, M)
+        self.cost_model = cost_model
+        self.M = M
+        self.mode = mode
+        self._meta: Dict[int, Tuple[int, float]] = {}  # key -> (n, last)
+        self._intervals: Dict[int, float] = {}
+
+    def _interval(self, n_kvs: int) -> float:
+        iv = self._intervals.get(n_kvs)
+        if iv is None:
+            from repro.core.five_minute_rule import break_even_interval
+            iv = break_even_interval(self.cost_model, n_kvs, self.M,
+                                     mode=self.mode).interval
+            iv = max(iv, 1e-12)        # swap-unmodeled cost models -> 0
+            self._intervals[n_kvs] = iv
+        return iv
+
+    def record_insert(self, key: int, n_kvs: int, now: float) -> None:
+        super().record_insert(key, n_kvs, now)
+        self._meta[key] = (max(int(n_kvs), 1), now)
+
+    def record_hit(self, key: int, now: float) -> None:
+        n, _ = self._meta[key]
+        self._meta[key] = (n, now)
+
+    def record_remove(self, key: int) -> None:
+        super().record_remove(key)
+        self._meta.pop(key, None)
+
+    def rank(self, key: int, now: float) -> float:
+        n, last = self._meta[key]
+        return max(now - last, 0.0) / self._interval(n)
+
+
+class BeladyOraclePolicy(ReplacementPolicy):
+    """Offline MIN/OPT ablation: evict the entry whose NEXT access lies
+    farthest in the future (never-again entries first).  ``future`` maps
+    each chain key to its access times; entries with no future entry are
+    treated as never accessed again."""
+
+    name = "belady"
+
+    def __init__(self, future: Optional[Dict[int, Sequence[float]]] = None
+                 ) -> None:
+        super().__init__()
+        self.future: Dict[int, List[float]] = {
+            k: sorted(v) for k, v in (future or {}).items()}
+
+    def rank(self, key: int, now: float) -> float:
+        times = self.future.get(key)
+        if times:
+            i = bisect.bisect_right(times, now)
+            if i < len(times):
+                return times[i]
+        return float("inf")
+
+
+def make_replacement_policy(name: str, *, cost_model=None, M: int = 0,
+                            mode: str = "kv_projection",
+                            future: Optional[Dict[int, Sequence[float]]]
+                            = None) -> ReplacementPolicy:
+    """Factory for the page-pool policies (``SchedulerConfig.
+    cache_policy`` names land here)."""
+    key = name.lower().replace("-", "_")
+    if key == "lru":
+        return LRUPolicy()
+    if key == "break_even":
+        if cost_model is None or M <= 0:
+            raise ValueError(
+                "break_even replacement needs a cost model and M > 0")
+        return BreakEvenPolicy(cost_model, M, mode=mode)
+    if key in ("belady", "belady_oracle"):
+        return BeladyOraclePolicy(future)
+    raise ValueError(f"unknown cache replacement policy {name!r}")
+
+
+def belady_future_from_requests(requests: Iterable[Request],
+                                page_size: int
+                                ) -> Dict[int, List[float]]:
+    """Chain-key -> sorted arrival times over a known offline workload —
+    the oracle's future-access table (requests need real prompts)."""
+    from repro.core.kvcache import PrefixCache
+
+    future: Dict[int, List[float]] = {}
+    for r in requests:
+        if r.prompt is None:
+            continue
+        for key in PrefixCache.chain_keys(r.prompt, page_size):
+            future.setdefault(key, []).append(r.arrival)
+    return {k: sorted(v) for k, v in future.items()}

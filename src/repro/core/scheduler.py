@@ -65,6 +65,18 @@ class SchedulerConfig:
     # — the Fig. 8 crossover decides swap-vs-recompute per page run.
     # Requires a paged data plane (the engine enforces plane="paged").
     partial_preempt: bool = False
+    # Page-pool cache replacement (§6 five-minute rule): which
+    # ``policies.ReplacementPolicy`` the prefix registry evicts by —
+    # "lru" | "break_even" | "belady-oracle" (offline ablation).
+    # Declared HERE so control plane (simulator shadow charging) and
+    # data plane (engine allocator) read one source and agree on which
+    # tier every prefix lands in.
+    cache_policy: str = "lru"
+    # Host demotion tier: evicted prefix pages are demoted into the
+    # KVSwapStore instead of discarded, and a registry hit on a
+    # host-resident prefix promotes it back through the swap path,
+    # charged ``cost_model.swap_time`` (virtual AND wall time).
+    cache_demotion: bool = False
 
 
 @dataclass
@@ -382,6 +394,8 @@ def make_scheduler(name: str, M: int, *, S: int = 4096,
                    preempt_mode: str = "recompute",
                    page_size: int = 1,
                    partial_preempt: bool = False,
+                   cache_policy: str = "lru",
+                   cache_demotion: bool = False,
                    cost_model: Optional["CostModel"] = None) -> Scheduler:
     name = name.lower()
     presets = {
@@ -407,5 +421,7 @@ def make_scheduler(name: str, M: int, *, S: int = 4096,
     cfg = SchedulerConfig(M=M, S=S, reserve=reserve, replacement=repl,
                           ranking=ranking, use_histogram=use_histogram,
                           preempt_mode=preempt_mode, page_size=page_size,
-                          partial_preempt=partial_preempt, **kw)
+                          partial_preempt=partial_preempt,
+                          cache_policy=cache_policy,
+                          cache_demotion=cache_demotion, **kw)
     return Scheduler(cfg, cost_model=cost_model)

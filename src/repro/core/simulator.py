@@ -5,15 +5,25 @@ instead of GPUs: each batch advances virtual time by the model's predicted
 batch time.  Produces the metrics of §5.1 (latency, TTFT, TPOT, TPS),
 preemption counts, and per-batch logs (memory usage, batch size) used by
 every multi-batch figure (9, 11, 12, 14, App. A-D).
+
+``PrefixTierSim`` is the virtual-time shadow of the paged engine's
+two-tier prefix cache (§6 replacement policy + host demotion): it runs
+the SAME ``PagedAllocator`` control plane and the same ``KVSwapStore``
+host-tier bookkeeping (metadata-only — no bytes move) at the same points
+of the batch loop, so demotion/promotion counts and their ``swap_time``
+charges match the serving engine batch-for-batch on identical schedules
+(the demotion/promotion parity test pins this).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import BatchSpec, CostModel
+from repro.core.kvcache import PagedAllocator, PrefixCache, attach_prefix_run
+from repro.core.policies import make_replacement_policy
 from repro.core.request import Phase, Request
-from repro.core.scheduler import Batch, Scheduler
+from repro.core.scheduler import Batch, Scheduler, SchedulerConfig
 
 
 @dataclass
@@ -43,6 +53,9 @@ class SimResult:
     num_preemptions: int = 0    # full + partial (page-level) preemptions
     num_partial_preempts: int = 0
     num_swaps: int = 0
+    # prefix-cache tier counters when a PrefixTierSim shadow ran
+    # (promotions/demotions/charges + the shadow allocator's stats)
+    prefix_stats: Dict[str, float] = field(default_factory=dict)
 
     # --- aggregate metrics (§5.1) -------------------------------------- #
     @property
@@ -118,14 +131,154 @@ def _spec_of(batch: Batch) -> BatchSpec:
     return spec
 
 
+class PrefixTierSim:
+    """Virtual-time shadow of the paged engine's two-tier prefix cache.
+
+    Runs the engine's EXACT control plane — the same ``PagedAllocator``
+    (same replacement policy, same eviction/demotion hook) and the same
+    ``KVSwapStore`` host-tier bookkeeping with metadata-only entries
+    (``kv=None``; ``page_nbytes`` stands in for the real snapshot size,
+    which for the engine is ``2 * L * page * Hkv * D * itemsize``) — at
+    the same points of the batch loop.  Requests therefore need real
+    ``prompt`` token ids.  Promotions and demotions charge
+    ``cost_model.swap_time`` into the batch being priced, exactly like
+    the engine, so on identical schedules the two sides agree
+    batch-for-batch on counts AND on virtual time.
+
+    Pass one to :func:`simulate`; read ``stats`` / ``alloc.stats`` (or
+    ``SimResult.prefix_stats``) afterwards.  Use ``host_bytes=None``
+    (unbounded) unless you replicate the engine's suspend traffic in the
+    same store — the byte budget there is shared with swap entries.
+    """
+
+    def __init__(self, scfg: SchedulerConfig, cost_model: CostModel, *,
+                 page_nbytes: int, host_bytes: Optional[int] = None):
+        from repro.serving.swap_store import KVSwapStore
+        pg = scfg.page_size
+        assert pg > 1, "prefix-tier shadow needs page_size > 1"
+        self.pg = pg
+        self.cm = cost_model
+        self.demotion = bool(scfg.cache_demotion)
+        self.page_nbytes = int(page_nbytes)
+        self.store = KVSwapStore(capacity_bytes=host_bytes)
+        self.alloc = PagedAllocator(
+            max(1, -(-scfg.M // pg)), pg,
+            policy=make_replacement_policy(scfg.cache_policy,
+                                           cost_model=cost_model,
+                                           M=scfg.M),
+            on_evict=self._demote if self.demotion else None)
+        self.pending_s = 0.0      # tier charges owed to the current batch
+        self.stats: Dict[str, float] = dict(
+            promotions=0, demotions=0, demote_drops=0,
+            kv_promoted=0, kv_demoted=0, tier_swap_s=0.0)
+        self._keys: Dict[int, List[int]] = {}
+        self._ptoks: Dict[int, List[Tuple[int, ...]]] = {}
+
+    def _demote(self, key: int, page: int, tokens, n_kvs: int) -> None:
+        from repro.serving.swap_store import SwapStoreFullError
+        if self.store.has_prefix(key):
+            return
+        try:
+            self.store.put_prefix(key, tokens, n_kvs, None,
+                                  nbytes=self.page_nbytes)
+        except SwapStoreFullError:
+            self.stats["demote_drops"] += 1
+            return
+        self.pending_s += self.cm.swap_time(self.pg)
+        self.stats["demotions"] += 1
+        self.stats["kv_demoted"] += self.pg
+
+    def _chain(self, r: Request):
+        keys = self._keys.get(r.rid)
+        if keys is None:
+            assert r.prompt is not None, \
+                f"prefix-tier shadow needs real prompts (rid {r.rid})"
+            keys = PrefixCache.chain_keys(r.prompt, self.pg)
+            self._keys[r.rid] = keys
+            self._ptoks[r.rid] = [
+                tuple(r.prompt[i * self.pg:(i + 1) * self.pg])
+                for i in range(len(keys))]
+        return keys, self._ptoks[r.rid]
+
+    # --- batch-loop hooks (mirror serving.engine.Engine.step) ---------- #
+    def begin(self, now: float) -> None:
+        self.alloc.now = now
+
+    def preempts(self, batch: Batch) -> None:
+        for r, npg, _, _ in batch.partial_preempted:
+            if r.running:       # folded sheds free with the full preempt
+                self.alloc.free_tail(r.rid, npg)
+        for v in batch.preempted:
+            self.alloc.free(v.rid)
+
+    def swap_restores(self, swapped_in, tail_in) -> None:
+        for r in swapped_in:
+            self.alloc.allocate(r.rid, r.suspended_m)
+        for r in tail_in:
+            self.alloc.allocate(r.rid, r.tail_suspended_m)
+
+    def pre_items(self, prefill_items, decode_items) -> None:
+        """Claim-time control plane of the engine: prefix attach (device
+        hits + host promotions), page allocation, CoW guard."""
+        for r, c in prefill_items:
+            skip = 0
+            if r.m == 0 and not self.alloc.has(r.rid):
+                skip = self._attach(r, c)
+            self.alloc.allocate(r.rid, c - skip)
+            pos = r.m + skip
+            if pos % self.pg:
+                self.alloc.ensure_private(r.rid, pos // self.pg)
+        for r, _ in decode_items:
+            self.alloc.allocate(r.rid, 1)
+            if r.m % self.pg:
+                self.alloc.ensure_private(r.rid, r.m // self.pg)
+
+    def _attach(self, r: Request, c: int) -> int:
+        cap = min(r.input_len - 1, c - 1) // self.pg
+        if cap <= 0:
+            return 0
+        keys, ptoks = self._chain(r)
+        attached, promoted = attach_prefix_run(
+            self.alloc, r.rid, keys[:cap], ptoks[:cap],
+            host_tier=self.store if self.demotion else None, restore=None)
+        if promoted:
+            self.pending_s += self.cm.swap_time(promoted)
+            self.stats["promotions"] += promoted // self.pg
+            self.stats["kv_promoted"] += promoted
+        return attached
+
+    def drain(self) -> float:
+        """Tier charges accrued for the batch being priced."""
+        s, self.pending_s = self.pending_s, 0.0
+        self.stats["tier_swap_s"] += s
+        return s
+
+    def register(self, r: Request, m_new: int) -> None:
+        n = min(m_new, r.input_len) // self.pg
+        if n > 0 and self.alloc.has(r.rid):
+            keys, ptoks = self._chain(r)
+            self.alloc.register_prefix(r.rid, keys[:n], ptoks[:n])
+
+    def on_finish(self, r: Request) -> None:
+        self.alloc.free(r.rid)
+
+    def result_stats(self) -> Dict[str, float]:
+        return {**self.stats, **self.alloc.stats}
+
+
 def simulate(scheduler: Scheduler, requests: Sequence[Request],
              cost_model: CostModel, *, max_batches: int = 2_000_000,
-             record_batches: bool = True) -> SimResult:
+             record_batches: bool = True,
+             prefix_sim: Optional[PrefixTierSim] = None) -> SimResult:
     """Run the schedule to completion under virtual (cost-model) time.
 
     Swap-preempted victims are charged ``cost_model.swap_time`` on the
     way out and again on restore (§5.4), so simulated schedules price the
-    host link exactly like the serving engine's data plane does.
+    host link exactly like the serving engine's data plane does.  An
+    optional ``prefix_sim`` shadow additionally models the paged
+    engine's two-tier prefix cache (policy-driven reclaim, host
+    demotion, promotion) and charges its host-link traffic into each
+    batch's virtual time.
     """
     if scheduler.cost_model is None:
         scheduler.cost_model = cost_model   # auto preempt-mode pricing
@@ -148,7 +301,11 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
             now = pending[i].arrival          # idle: jump to next arrival
             continue
 
+        if prefix_sim is not None:
+            prefix_sim.begin(now)       # replacement-policy clock
         batch = scheduler.get_next_batch()
+        if prefix_sim is not None:
+            prefix_sim.preempts(batch)
         # host-link swap-out charges accrue even when the batch admits
         # nothing (the victim's transfer happens regardless); they are
         # carried into the next executed batch's virtual time
@@ -175,10 +332,22 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
                 f"running={len(scheduler.running)})")
 
         spec = _spec_of(batch)
+        # phase split by the engine's classification predicate (same
+        # phase test _spec_of uses) — the shadow's claim-time hooks run
+        # over these in the engine's order: prefills, then decodes
+        pf_items = dc_items = None
+        if prefix_sim is not None:
+            dc_items = [(r, c) for r, c in batch.items
+                        if r.generated > 0 and r.remaining_prefill == c == 1]
+            pf_items = [(r, c) for r, c in batch.items
+                        if not (r.generated > 0
+                                and r.remaining_prefill == c == 1)]
         # swap-in charges for suspended requests re-admitted here, and
         # tail-run restores for partially-shed requests batched again
         swapped_in = [r for r, _ in batch.items if r.suspended]
         tail_in = [r for r, _ in batch.items if r.tail_suspended_m > 0]
+        if prefix_sim is not None:
+            prefix_sim.swap_restores(swapped_in, tail_in)
         swap_s = carry_swap_s + sum(cost_model.swap_time(r.suspended_m)
                                     for r in swapped_in) \
             + sum(cost_model.swap_time(r.tail_suspended_m) for r in tail_in)
@@ -188,12 +357,25 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
             r.resume()
         for r in tail_in:
             r.resume_tail()
+        if prefix_sim is not None:
+            # claim-time control plane AFTER restore (r.m is then the
+            # restored context, as the engine sees it) and BEFORE dt —
+            # promotion/demotion charges belong to THIS batch
+            prefix_sim.pre_items(pf_items, dc_items)
+            swap_s += prefix_sim.drain()
         dt = cost_model.batch_time(spec) + swap_s
         now += dt
+        pf_rids = ({r.rid for r, _ in pf_items}
+                   if prefix_sim is not None else ())
         for r, c in batch.items:
+            m_new = r.m + c
             r.advance(c, now)
+            if prefix_sim is not None and r.rid in pf_rids:
+                prefix_sim.register(r, m_new)
             if r.finished:
                 scheduler.complete(r)
+                if prefix_sim is not None:
+                    prefix_sim.on_finish(r)
         if record_batches:
             kv_used = sum(r.m for r in scheduler.running)
             result.batches.append(BatchLog(
@@ -209,6 +391,8 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
     result.num_preemptions = scheduler.num_preemptions
     result.num_partial_preempts = scheduler.num_partial_preempts
     result.num_swaps = scheduler.num_swaps
+    if prefix_sim is not None:
+        result.prefix_stats = prefix_sim.result_stats()
     return result
 
 

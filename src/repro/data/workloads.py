@@ -123,3 +123,55 @@ def shared_prefix(n: int = 8, *, input_len: int = 32,
                            arrival=0.0 if i < num_groups else stagger,
                            prompt=prompt))
     return out
+
+
+def zipf_shared_prefix(n: int = 48, *, num_groups: int = 6,
+                       alpha: float = 1.2, page_size: int = 8,
+                       prefix_pages: Tuple[int, int] = (2, 4),
+                       input_len: int = 48, output_len: int = 4,
+                       vocab: int = 1000, arrival_gap: float = 5e-4,
+                       seed: int = 0) -> List[Request]:
+    """Zipf-skewed hot-prefix workload — the analytics shape of
+    *Optimizing LLM Queries in Relational Workloads* (arXiv 2403.05821),
+    where hit-rate-blind LRU loses and cost-based replacement wins.
+
+    ``num_groups`` prefix templates with popularity ``p(g) ∝
+    (g+1)^-alpha``: a few HOT templates are re-referenced constantly, a
+    long tail of COLD templates appears once or twice.  Template prefix
+    LENGTH grows with coldness (``prefix_pages`` = (hot, cold) in full
+    ``page_size`` pages): the cold tail is exactly the long-prefix scan
+    traffic that flushes an LRU registry, while the §6 break-even policy
+    evicts those first (long prefixes have SHORTER break-even residency
+    — Eq. 5) and keeps the hot short templates resident.
+
+    Prompts = group prefix + per-request random suffix padded to a
+    common ``input_len``; arrivals are staggered ``arrival_gap`` apart so
+    reuse is cross-batch (co-scheduled duplicates all miss).  Always
+    generates real token ids (engine mode)."""
+    assert num_groups >= 2 and prefix_pages[0] <= prefix_pages[1]
+    assert n >= num_groups, \
+        f"need n >= num_groups (every template appears once), " \
+        f"got n={n} < {num_groups}"
+    assert prefix_pages[1] * page_size < input_len, \
+        "prefix must leave room for a suffix"
+    rng = np.random.default_rng(seed)
+    probs = (1.0 / np.arange(1, num_groups + 1) ** alpha)
+    probs /= probs.sum()
+    lo, hi = prefix_pages
+    plens = [int(round(lo + (hi - lo) * g / max(num_groups - 1, 1)))
+             * page_size for g in range(num_groups)]
+    prefixes = [rng.integers(0, vocab, size=p).tolist() for p in plens]
+    # every group appears at least once (the cold tail must exist to
+    # pollute the cache); remaining draws follow the Zipf popularity
+    groups = list(range(num_groups)) \
+        + rng.choice(num_groups, size=n - num_groups, p=probs).tolist()
+    rng.shuffle(groups)
+    out = []
+    for i, g in enumerate(groups):
+        suffix = rng.integers(0, vocab,
+                              size=input_len - plens[g]).tolist()
+        out.append(Request(rid=i, input_len=input_len,
+                           output_len=output_len,
+                           arrival=i * arrival_gap,
+                           prompt=prefixes[g] + suffix))
+    return out

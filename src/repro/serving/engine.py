@@ -41,9 +41,21 @@ Execution plane — THREE data planes, selected by ``EngineConfig.plane``:
     refcounted prefix registry keyed by chained content hashes; a new
     request whose prompt matches maps the SAME physical pages
     (copy-on-write guarded via ``PagedAllocator.ensure_private``) and
-    skips their prefill compute.  Registry-cached pages are reclaimed
-    LRU when the pool runs short, so they never shrink schedulable
-    capacity.
+    skips their prefill compute.  When the pool runs short,
+    registry-cached pages are reclaimed in the eviction order of a
+    PLUGGABLE replacement policy (``SchedulerConfig.cache_policy`` /
+    ``EngineConfig.cache_policy``: ``lru``, or ``break_even`` — the §6
+    five-minute rule scored per entry), so they never shrink
+    schedulable capacity; entries whose page a live table still maps
+    are skipped (evicting them frees nothing).
+  - *host demotion tier* (``cache_demotion``) — evicted prefix pages
+    are demoted into the ``KVSwapStore`` as refcount-free
+    ``PrefixPageEntry`` snapshots instead of discarded; a registry hit
+    on a host-resident prefix PROMOTES the page back through the swap
+    path, charged ``swap_time`` in virtual time (mirrored by the
+    simulator's ``PrefixTierSim`` shadow) and measured on the wall —
+    every KV access resolves along the Fig. 8 spectrum: GPU-resident <
+    host swap-in < recompute.
 
   Sliding-window and SSM/RWKV state is O(1) per request and stays
   slot-resident: for those families ``plane="paged"`` keeps the batched
@@ -115,7 +127,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import BatchSpec, CostModel
-from repro.core.kvcache import PagedAllocator, PrefixCache
+from repro.core.kvcache import (PagedAllocator, PrefixCache,
+                                attach_prefix_run)
+from repro.core.policies import make_replacement_policy
 from repro.core.request import Request
 from repro.core.scheduler import Scheduler
 from repro.core.simulator import BatchLog, SimResult
@@ -150,6 +164,18 @@ class EngineConfig:
     prefix_sharing: bool = True   # paged plane: map identical full
     #                               prompt pages to the same physical
     #                               pages via the refcounted registry
+    # --- page-pool cache replacement (§6 five-minute rule) ------------- #
+    cache_policy: Optional[str] = None   # "lru" | "break_even" — None
+    #                               keeps the SchedulerConfig's choice;
+    #                               set, it is written through to the
+    #                               scheduler (like page_size) so both
+    #                               planes agree on one policy
+    cache_demotion: Optional[bool] = None  # evicted prefix pages demote
+    #                               to the host KVSwapStore instead of
+    #                               being discarded; registry hits on
+    #                               host-resident prefixes promote back
+    #                               through the swap path (charged
+    #                               swap_time).  None = scheduler's.
     decode_append: str = "inline"   # "inline" | "deferred" (one cache
     #                                 scatter per step, §Perf cell A)
     async_swap: bool = True       # double-buffered async swap-out D2H
@@ -204,15 +230,30 @@ class Engine:
         # on schedules the control plane proved feasible.  The scheduler
         # is told the granularity so both sides round identically.
         scheduler.cfg.page_size = ecfg.page_size
-        self.allocator = PagedAllocator(
-            num_pages=max(1, -(-scheduler.cfg.M // ecfg.page_size)),
-            page_size=ecfg.page_size)
+        # cache-replacement knobs: an EngineConfig override is written
+        # through to the SchedulerConfig (like page_size above) so the
+        # control plane — including any simulator shadow built from the
+        # same config — and this data plane agree on one policy and on
+        # which tier every prefix lands in
+        if ecfg.cache_policy is not None:
+            scheduler.cfg.cache_policy = ecfg.cache_policy
+        if ecfg.cache_demotion is not None:
+            scheduler.cfg.cache_demotion = ecfg.cache_demotion
         # pooled paged data plane: only unbounded dense-attention
         # families are pooled; bounded-state families keep slots
         self._pooled = ecfg.plane == "paged" and paged_supported(cfg)
         if scheduler.cfg.partial_preempt:
             assert self._pooled, \
                 "partial_preempt needs the pooled paged data plane"
+        self._demotion = bool(scheduler.cfg.cache_demotion) \
+            and self._pooled and ecfg.prefix_sharing
+        self.allocator = PagedAllocator(
+            num_pages=max(1, -(-scheduler.cfg.M // ecfg.page_size)),
+            page_size=ecfg.page_size,
+            policy=make_replacement_policy(scheduler.cfg.cache_policy,
+                                           cost_model=cost_model,
+                                           M=scheduler.cfg.M),
+            on_evict=self._demote_prefix if self._demotion else None)
         if self._pooled:
             pg = ecfg.page_size
             self.max_pages = -(-ecfg.cache_len // pg)
@@ -245,10 +286,18 @@ class Engine:
         self._pending_swaps: "OrderedDict[int, Tuple[SwapEntry, int]]" = \
             OrderedDict()
         self._step_no = 0
-        # measured host-transfer wall times (fig08 validation column)
+        # measured host-transfer wall times (fig08 validation column);
+        # promotions/demotions are the prefix cache's host-tier traffic
         self.swap_stats: Dict[str, float] = dict(
             swap_outs=0, swap_ins=0, kv_out=0, kv_in=0, swap_fallbacks=0,
-            drains_on_swapin=0, wall_out_s=0.0, wall_in_s=0.0)
+            drains_on_swapin=0, wall_out_s=0.0, wall_in_s=0.0,
+            promotions=0, demotions=0, demote_drops=0,
+            kv_promoted=0, kv_demoted=0,
+            wall_promote_s=0.0, wall_demote_s=0.0)
+        # virtual-time owed by prefix-tier traffic (demotions fire inside
+        # allocator reclaims; promotions inside the prefix attach) —
+        # folded into the CURRENT batch's swap_s before its dt is priced
+        self._tier_swap_s = 0.0
         # swap-out virtual-time charges from rounds that admitted no
         # items, owed to the next executed batch (mirrors the simulator)
         self._carry_swap_s = 0.0
@@ -620,26 +669,62 @@ class Engine:
         pg = self.ecfg.page_size
         return [tuple(r.prompt[i * pg:(i + 1) * pg]) for i in range(n)]
 
+    def _demote_prefix(self, key: int, page: int, tokens, n_kvs: int
+                       ) -> None:
+        """Allocator eviction hook: snapshot the evicted registry page
+        to the host demotion tier (refcount-free ``PrefixPageEntry``)
+        instead of discarding its KV.  A full store drops the demotion —
+        the page falls back to recompute-on-next-miss, the pre-demotion
+        behaviour.  Charged ``swap_time(page_size)`` in virtual time
+        (folded into the current batch) and measured on the wall."""
+        if self.swap_store.has_prefix(key):
+            return          # an identical snapshot is already host-resident
+        t0 = time.perf_counter()
+        try:
+            self._check_run_capacity(1)     # metadata check BEFORE the D2H
+            self.swap_store.put_prefix(key, tokens, n_kvs,
+                                       self._snapshot_pages([page]))
+        except SwapStoreFullError:
+            self.swap_stats["demote_drops"] += 1
+            return
+        pg = self.ecfg.page_size
+        self._tier_swap_s += self._swap_time(pg)
+        self.swap_stats["demotions"] += 1
+        self.swap_stats["kv_demoted"] += pg
+        self.swap_stats["wall_demote_s"] += time.perf_counter() - t0
+
+    def _promote_restore(self, page: int, kv) -> None:
+        t0 = time.perf_counter()
+        self._restore_pages([page], kv)
+        self.swap_stats["wall_promote_s"] += time.perf_counter() - t0
+
     def _attach_prefix(self, r: Request, c: int) -> int:
-        """At a fresh claim, map registry-cached pages matching the
-        prompt's leading full pages into r's block table and return the
-        number of tokens whose prefill compute is SKIPPED.  Control
-        plane accounting is untouched (each sharer is charged its full
-        page-rounded occupancy — sharing only ever reduces physical
-        use), so admitted schedules stay allocator-feasible.  At least
-        one granted token is always computed (the emitting batch needs
-        real logits), and only pages wholly inside this grant qualify."""
+        """At a fresh claim, map cached pages matching the prompt's
+        leading full pages into r's block table and return the number of
+        tokens whose prefill compute is SKIPPED.  Each chain key resolves
+        against the DEVICE registry first, then (with demotion enabled)
+        against the host tier — a host hit promotes the page back through
+        the swap path, charged ``swap_time`` into this batch's virtual
+        time exactly like a §5.4 swap-in.  Control-plane accounting is
+        untouched (each sharer is charged its full page-rounded occupancy
+        — sharing only ever reduces physical use), so admitted schedules
+        stay allocator-feasible.  At least one granted token is always
+        computed (the emitting batch needs real logits), and only pages
+        wholly inside this grant qualify."""
         pg = self.ecfg.page_size
         cap = min(r.input_len - 1, c - 1) // pg
         if pg <= 1 or cap <= 0:
             return 0
-        pages = self.allocator.lookup_prefix(self._page_keys(r)[:cap],
-                                             self._page_tokens(r, cap))
-        if not pages:
-            return 0
-        shared = len(pages) * pg
-        self.allocator.share(r.rid, pages, shared)
-        return shared
+        attached, promoted = attach_prefix_run(
+            self.allocator, r.rid, self._page_keys(r)[:cap],
+            self._page_tokens(r, cap),
+            host_tier=self.swap_store if self._demotion else None,
+            restore=self._promote_restore)
+        if promoted:
+            self._tier_swap_s += self._swap_time(promoted)
+            self.swap_stats["promotions"] += promoted // pg
+            self.swap_stats["kv_promoted"] += promoted
+        return attached
 
     def _register_prefix(self, r: Request, m_new: int) -> None:
         """Publish the now-complete full PROMPT pages to the registry
@@ -767,7 +852,6 @@ class Engine:
         plans = []
         for r, c in prefill_items:
             skip = self._prefix_skip.pop(r.rid, 0)
-            self._cow_guard(r.rid, r.m + skip)
             plans.append([r, self.slot_of[r.rid], r.m + skip, c - skip])
         emits = {r.rid: r.m + c == r.target_context for r, c in prefill_items}
         block_tables = self._block_tables_device()
@@ -806,6 +890,7 @@ class Engine:
             return 0
         t0 = time.perf_counter()
         self._step_no += 1
+        self.allocator.now = self.now   # replacement-policy clock
         batch = self.sched.get_next_batch()
         swap_s = 0.0
         num_swap_out = num_swap_in = 0
@@ -883,22 +968,37 @@ class Engine:
             else:
                 prefill_items.append((r, c))
                 spec.prefills.append((c, r.m))
+
+        # claim slots + control-plane allocation BEFORE pricing the
+        # batch: the prefix attach may PROMOTE host-demoted pages, and
+        # any allocation (or CoW remap) may reclaim-and-DEMOTE registry
+        # entries — those host-link swap_time charges belong to THIS
+        # batch's virtual time, mirroring the simulator shadow
+        for r, c in prefill_items:
+            if r.rid not in self.slot_of:
+                self._claim_slot(r.rid, reset=not self._pooled)
+            skip = 0
+            if (self._pooled and self.ecfg.prefix_sharing
+                    and r.m == 0 and not self.allocator.has(r.rid)):
+                skip = self._attach_prefix(r, c)
+            if self._pooled:
+                self._prefix_skip[r.rid] = skip
+            self.allocator.allocate(r.rid, c - skip)
+            if self._pooled:
+                self._cow_guard(r.rid, r.m + skip)
+        for r, _ in decode_items:
+            self.allocator.allocate(r.rid, 1)
+            if self._pooled:
+                self._cow_guard(r.rid, r.m)
+        swap_s += self._tier_swap_s
+        self._tier_swap_s = 0.0
+
         dt = (self.cost_model.batch_time(spec) if self.cost_model else 0.0) \
             + swap_s
         self.now += dt
 
         # ---- prefills (one batched bucketed call per round) ------------- #
         if prefill_items:
-            for r, c in prefill_items:
-                if r.rid not in self.slot_of:
-                    self._claim_slot(r.rid, reset=not self._pooled)
-                skip = 0
-                if (self._pooled and self.ecfg.prefix_sharing
-                        and r.m == 0 and not self.allocator.has(r.rid)):
-                    skip = self._attach_prefix(r, c)
-                if self._pooled:
-                    self._prefix_skip[r.rid] = skip
-                self.allocator.allocate(r.rid, c - skip)
             runner = {"batched": self._run_prefills_batched,
                       "legacy": self._run_prefills_legacy,
                       "paged": (self._run_prefills_paged if self._pooled
@@ -922,10 +1022,6 @@ class Engine:
         # ---- decodes (one batched fused step over all slots) ------------ #
         if decode_items:
             nslots = self.ecfg.nslots
-            for r, _ in decode_items:
-                self.allocator.allocate(r.rid, 1)
-                if self._pooled:
-                    self._cow_guard(r.rid, r.m)
             if self._pooled:
                 host = self._run_decodes_paged(decode_items)
             else:

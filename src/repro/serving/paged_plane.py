@@ -24,8 +24,11 @@ SSM/RWKV state is O(1) per request, so the engine keeps it slot-resident
 partially evicted anyway — there is no "tail" to shed).
 
 The pools ARE the persistent memory layout — which is what makes
-page-level partial preemption and refcounted shared-prefix pages
-possible upstream.  The decode path reads pages in place (the Pallas
+page-level partial preemption, refcounted shared-prefix pages, and the
+prefix cache's host demotion tier possible upstream: a demoted registry
+page is snapshotted straight out of these pools before eviction and
+scattered back into a freshly promoted page on the next registry hit
+(the engine's ``_snapshot_pages`` / ``_restore_pages`` on pool slices).  The decode path reads pages in place (the Pallas
 kernel DMAs exactly the owned pages); the chunked-prefill path does
 still gather a TRANSIENT per-row ``(B, max_pages*page, Hkv, D)`` view
 for its attention (same activation footprint as the dense plane's slot

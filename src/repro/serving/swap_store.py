@@ -13,7 +13,7 @@ raise).  An optional ``capacity_bytes`` bound models finite host memory;
 exceeding it raises ``SwapStoreFullError`` so callers can fall back to
 discard-and-recompute.
 
-Two entry granularities share the byte budget:
+Three entry granularities share the byte budget:
 
 * ``SwapEntry`` — a whole contiguous slot slice (the batched/legacy
   planes' full suspend).
@@ -22,6 +22,14 @@ Two entry granularities share the byte budget:
   full suspend: one run covering every device page).  Runs for one rid
   stack as the tail is shed repeatedly and always tile a contiguous
   span, restored together in ascending-start order.
+* ``PrefixPageEntry`` — the HOST DEMOTION TIER of the prefix cache: a
+  refcount-free snapshot of ONE registry page evicted by the page-pool
+  replacement policy, keyed by its chain hash (not a rid — no request
+  owns it).  A later registry miss that matches the key (token-verified,
+  like the device registry) promotes it back through the swap path.
+  Unlike suspend entries, demoted prefixes may legitimately outlive the
+  run — ``__len__`` counts only suspend bookkeeping, so end-of-run
+  leak checks stay meaningful.
 """
 from __future__ import annotations
 
@@ -75,6 +83,26 @@ class PageRunEntry:
             self.nbytes = _tree_nbytes(self.kv)
 
 
+@dataclass
+class PrefixPageEntry:
+    """Host-demoted prefix-cache page (refcount-free: keyed by chain
+    hash, owned by no request).  ``tokens`` are the page's token ids
+    (collision verification at promotion, exactly like the device
+    registry); ``n_kvs`` the chain depth the replacement policy scores
+    with; ``kv`` the per-layer page snapshot ``{"k": (L, 1, page, Hkv,
+    D), "v": ...}`` — or None for metadata-only shadows (the simulator
+    charges virtual time without moving bytes; pass ``nbytes``)."""
+    key: int
+    tokens: tuple
+    n_kvs: int
+    kv: Any
+    nbytes: int = field(default=0)
+
+    def __post_init__(self) -> None:
+        if not self.nbytes and self.kv is not None:
+            self.nbytes = _tree_nbytes(self.kv)
+
+
 class KVSwapStore:
     """rid -> suspended slot snapshot, with byte accounting."""
 
@@ -83,6 +111,7 @@ class KVSwapStore:
         self.capacity_bytes = capacity_bytes
         self._entries: Dict[int, SwapEntry] = {}
         self._runs: Dict[int, List[PageRunEntry]] = {}
+        self._prefixes: Dict[int, PrefixPageEntry] = {}
         self._nbytes = 0
 
     # ------------------------------------------------------------------ #
@@ -171,8 +200,60 @@ class KVSwapStore:
     def run_tokens(self, rid: int) -> int:
         return sum(r.num_tokens for r in self._runs.get(rid, []))
 
+    # --- host demotion tier of the prefix cache ------------------------ #
+    def put_prefix(self, key: int, tokens, n_kvs: int, kv: Any,
+                   nbytes: int = 0) -> PrefixPageEntry:
+        """Demote one evicted registry page to host memory."""
+        if key in self._prefixes:
+            raise ValueError(f"prefix key {key} already demoted")
+        entry = PrefixPageEntry(key=key, tokens=tuple(tokens),
+                                n_kvs=int(n_kvs), kv=kv, nbytes=nbytes)
+        if (self.capacity_bytes is not None
+                and self._nbytes + entry.nbytes > self.capacity_bytes):
+            raise SwapStoreFullError(
+                f"prefix key {key}: {entry.nbytes}B over capacity "
+                f"({self._nbytes}/{self.capacity_bytes}B held)")
+        self._prefixes[key] = entry
+        self._nbytes += entry.nbytes
+        return entry
+
+    def peek_prefix(self, key: int,
+                    tokens=None) -> Optional[PrefixPageEntry]:
+        """Host-tier lookup; a token mismatch (hash collision) is a
+        MISS, never another prompt's KV."""
+        entry = self._prefixes.get(key)
+        if entry is None:
+            return None
+        if tokens is not None and tuple(tokens) != entry.tokens:
+            return None
+        return entry
+
+    def pop_prefix(self, key: int) -> PrefixPageEntry:
+        """Promote: remove and return the demoted page snapshot."""
+        entry = self._prefixes.pop(key, None)
+        if entry is None:
+            raise KeyError(f"prefix key {key} not demoted")
+        self._nbytes -= entry.nbytes
+        return entry
+
+    def discard_prefix(self, key: int) -> bool:
+        entry = self._prefixes.pop(key, None)
+        if entry is None:
+            return False
+        self._nbytes -= entry.nbytes
+        return True
+
+    def has_prefix(self, key: int) -> bool:
+        return key in self._prefixes
+
+    @property
+    def num_prefix_entries(self) -> int:
+        return len(self._prefixes)
+
     # ------------------------------------------------------------------ #
     def __len__(self) -> int:
+        # suspend bookkeeping only: demoted prefixes (keyed by chain
+        # hash, not rid) may outlive the run by design
         return len(self._entries) + len(self._runs)
 
     def __contains__(self, rid: int) -> bool:
@@ -188,12 +269,15 @@ class KVSwapStore:
 
     def check_invariants(self) -> None:
         recount = sum(e.nbytes for e in self._entries.values()) \
-            + sum(r.nbytes for runs in self._runs.values() for r in runs)
+            + sum(r.nbytes for runs in self._runs.values() for r in runs) \
+            + sum(p.nbytes for p in self._prefixes.values())
         assert recount == self._nbytes, (recount, self._nbytes)
         if self.capacity_bytes is not None:
             assert self._nbytes <= self.capacity_bytes
         for rid, e in self._entries.items():
             assert rid == e.rid and e.num_kv > 0, (rid, e.rid, e.num_kv)
+        for key, p in self._prefixes.items():
+            assert key == p.key and p.n_kvs > 0, (key, p.key, p.n_kvs)
         for rid, runs in self._runs.items():
             assert runs, rid
             # runs tile a contiguous [min_start, end) span, no overlap

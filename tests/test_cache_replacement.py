@@ -1,0 +1,445 @@
+"""Break-even cache replacement + host demotion tier (PR 5).
+
+Covers: the pluggable page-pool ``ReplacementPolicy`` (lru /
+break_even / belady-oracle), the §6 five-minute-rule fixes
+(``ValueError`` on bad input, explicit ``mode="swap"``), the reclaim
+regression (evicting a still-mapped page must never burn a registry
+entry without freeing a page), the duplicate-key registry guard, the
+host demotion/promotion loop (engine), simulator-vs-engine parity for
+the demotion/promotion charging, and token-identical outputs across
+policies on the shared-prefix workloads.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core import (BeladyOraclePolicy, BreakEvenPolicy, LRUPolicy,
+                        OutOfPagesError, PagedAllocator, PrefixCache,
+                        PrefixTierSim, TheoreticalCostModel,
+                        belady_future_from_requests, get_hardware,
+                        make_replacement_policy, make_scheduler, simulate)
+from repro.core.five_minute_rule import break_even_interval
+from repro.data.workloads import shared_prefix, zipf_shared_prefix
+from repro.models import model as M
+from repro.serving import Engine, EngineConfig
+from repro.serving.swap_store import KVSwapStore, SwapStoreFullError
+
+RNG = jax.random.PRNGKey(0)
+_CFG_CACHE = {}
+
+
+def model_and_params(name="tinyllama-1.1b"):
+    if name not in _CFG_CACHE:
+        cfg = dataclasses.replace(get_config(name).reduced(),
+                                  dtype="float32")
+        _CFG_CACHE[name] = (cfg, M.init_params(cfg, RNG))
+    return _CFG_CACHE[name]
+
+
+def cost_model():
+    cfg, _ = model_and_params()
+    return TheoreticalCostModel(cfg, get_hardware("tpu_v5e"))
+
+
+def build_engine(M_kv=256, *, policy="lru", demotion=False, nslots=4,
+                 page_size=8, swap_bytes=None):
+    cfg, params = model_and_params()
+    sched = make_scheduler("vllm", M_kv, S=512, replacement="srf")
+    eng = Engine(cfg, params, sched,
+                 EngineConfig(nslots=nslots, cache_len=64, chunk=16,
+                              plane="paged", page_size=page_size,
+                              cache_policy=policy, cache_demotion=demotion,
+                              swap_bytes=swap_bytes),
+                 cost_model=cost_model())
+    return cfg, params, eng
+
+
+# --------------------------------------------------------------------- #
+# five-minute rule satellites
+# --------------------------------------------------------------------- #
+
+def test_break_even_rejects_nonpositive_n():
+    cm = cost_model()
+    for bad in (0, -1, -100):
+        with pytest.raises(ValueError, match="n_kvs"):
+            break_even_interval(cm, bad, 1000)
+
+
+def test_break_even_mode_swap_and_unknown():
+    cm = cost_model()
+    be = break_even_interval(cm, 64, 1000, mode="swap")
+    # in swap mode the PRIMARY interval is the swap-priced one
+    assert be.interval == be.interval_swap
+    assert be.t_recom == cm.swap_time(64)
+    full = break_even_interval(cm, 64, 1000, mode="full")
+    kvp = break_even_interval(cm, 64, 1000, mode="kv_projection")
+    assert full.t_recom >= kvp.t_recom          # refill >= projection-only
+    # every mode still reports the swap spectrum column
+    assert full.interval_swap == kvp.interval_swap == be.interval_swap
+    with pytest.raises(ValueError, match="mode"):
+        break_even_interval(cm, 64, 1000, mode="bogus")
+
+
+# --------------------------------------------------------------------- #
+# registry guards (satellites)
+# --------------------------------------------------------------------- #
+
+def test_prefix_insert_duplicate_key_raises():
+    """REGRESSION: the duplicate-key guard was a bare ``assert`` —
+    stripped under ``python -O`` a re-registered key silently leaked the
+    old page's pin.  It must be a real exception."""
+    pc = PrefixCache()
+    pc.insert(7, 0, (1, 2), n_kvs=2)
+    with pytest.raises(ValueError, match="already registered"):
+        pc.insert(7, 1, (1, 2), n_kvs=2)
+    # the original entry is untouched
+    assert pc.get(7) == 0
+
+
+def test_reclaim_never_burns_entry_without_freeing():
+    """REGRESSION (the PR's headline bugfix): under heavy sharing the
+    old ``_take`` popped LRU registry entries whose pages live tables
+    still mapped — destroying the entry, counting it reclaimed, and
+    freeing NOTHING, stripping the whole prefix cache for zero pages.
+    Now still-mapped candidates are skipped and ``reclaimed`` counts
+    only pages actually returned to the free list."""
+    a = PagedAllocator(num_pages=6, page_size=2)
+    keys = PrefixCache.chain_keys([1, 2, 3, 4, 5, 6, 7, 8], 2)
+    a.allocate(0, 8)                    # 4 pages
+    a.register_prefix(0, keys)
+    pages = a.lookup_prefix(keys)
+    a.share(1, pages, 8)                # rid 1 maps ALL cached pages
+    a.free(0)
+    # free: 2 pages; every registry page is still table-mapped by rid 1.
+    # old behaviour: evict all 4 entries, free 0 pages, then raise with
+    # the registry burned.  new: skip all, raise, registry intact.
+    with pytest.raises(OutOfPagesError):
+        a.allocate(2, 6)                # needs 3 pages
+    assert len(a.prefix_cache) == 4     # nothing burned
+    assert a.stats["reclaimed"] == 0
+    assert a.stats["reclaim_skipped"] >= 4
+    assert a.lookup_prefix(keys) == pages   # hits still served
+    a.check_invariants()
+    # once the sharer lets go the pages become pinned-only and reclaim
+    # works normally — entries evicted if and only if pages freed, and
+    # only as many as the deficit needs (2 free + 1 evicted = 3 pages)
+    a.free(1)
+    a.allocate(2, 6)
+    assert a.stats["reclaimed"] == 1 and len(a.prefix_cache) == 3
+    a.check_invariants()
+
+
+# --------------------------------------------------------------------- #
+# policy units
+# --------------------------------------------------------------------- #
+
+def test_lru_policy_order():
+    p = LRUPolicy()
+    p.record_insert(1, 2, 0.0)
+    p.record_insert(2, 2, 1.0)
+    p.record_insert(3, 2, 2.0)
+    assert p.eviction_order(3.0) == [1, 2, 3]
+    p.record_hit(1, 3.0)                       # refresh 1
+    assert p.eviction_order(4.0) == [2, 3, 1]
+
+
+def test_break_even_policy_long_prefix_evicts_sooner():
+    """Eq. 5: the break-even interval FALLS with chain depth, so at
+    equal idle time the LONG prefix ranks first for eviction — and a
+    recently-hit short entry outlives a colder long one even when the
+    long one is more recent (scan resistance LRU lacks)."""
+    cm = cost_model()
+    p = BreakEvenPolicy(cm, M=100_000)
+    p.record_insert(10, 16, 0.0)     # short prefix (2 pages of 8)
+    p.record_insert(11, 512, 0.0)    # long prefix, same recency
+    order = p.eviction_order(1.0)
+    assert order[0] == 11, order     # long evicts first
+    # hot short survives a newer cold long entry: idle/B(n) dominates
+    p2 = BreakEvenPolicy(cm, M=100_000)
+    p2.record_insert(1, 16, 0.0)
+    p2.record_hit(1, 9.0)            # hot: hit just before the decision
+    p2.record_insert(2, 2048, 8.0)   # cold scan entry, MORE recent insert
+    lru = LRUPolicy()
+    lru.record_insert(1, 16, 0.0)
+    lru.record_insert(2, 2048, 8.0)
+    lru.record_hit(1, 9.0)
+    assert lru.eviction_order(10.0)[0] == 2    # LRU agrees here...
+    assert p2.eviction_order(10.0)[0] == 2
+    # ...but when the hot entry's last hit is slightly OLDER than the
+    # scan entry's insert, LRU evicts the hot one while break-even still
+    # keeps it: idle_hot/B(16) = 2/B(16) < 1/B(2048) = idle_cold/B(2048)
+    # because B(16) ≈ 3x B(2048) (weight-load amortizes with depth)
+    p3 = BreakEvenPolicy(cm, M=100_000)
+    p3.record_insert(1, 16, 0.0)
+    p3.record_hit(1, 8.0)
+    p3.record_insert(2, 2048, 9.0)
+    lru3 = LRUPolicy()
+    lru3.record_insert(1, 16, 0.0)
+    lru3.record_hit(1, 8.0)
+    lru3.record_insert(2, 2048, 9.0)
+    assert lru3.eviction_order(10.0)[0] == 1   # recency-blind to cost
+    assert p3.eviction_order(10.0)[0] == 2     # five-minute rule keeps hot
+
+
+def test_belady_oracle_policy():
+    p = BeladyOraclePolicy({1: [5.0, 20.0], 2: [8.0], 3: []})
+    p.record_insert(1, 8, 0.0)
+    p.record_insert(2, 8, 0.0)
+    p.record_insert(3, 8, 0.0)
+    # at t=0: next accesses are 5.0 (1), 8.0 (2), never (3)
+    assert p.eviction_order(0.0) == [3, 2, 1]
+    # after t=8 request for key 2 passed: 2 is never used again either;
+    # ties (both inf) break by insertion order
+    assert p.eviction_order(9.0) == [2, 3, 1]
+
+
+def test_make_replacement_policy_factory():
+    assert isinstance(make_replacement_policy("lru"), LRUPolicy)
+    assert isinstance(
+        make_replacement_policy("break_even", cost_model=cost_model(),
+                                M=100), BreakEvenPolicy)
+    assert isinstance(make_replacement_policy("belady-oracle"),
+                      BeladyOraclePolicy)
+    with pytest.raises(ValueError):
+        make_replacement_policy("break_even")    # needs cost model + M
+    with pytest.raises(ValueError):
+        make_replacement_policy("mru")
+
+
+def test_belady_future_from_requests():
+    reqs = shared_prefix(n=4, input_len=16, prefix_frac=0.5,
+                         output_len=2, vocab=50, stagger=1.0, seed=0)
+    fut = belady_future_from_requests(reqs, page_size=8)
+    shared_key = PrefixCache.chain_keys(reqs[0].prompt, 8)[0]
+    assert len(fut[shared_key]) == 4           # every request shares page 0
+    assert fut[shared_key] == sorted(fut[shared_key])
+
+
+# --------------------------------------------------------------------- #
+# churn property test (satellite): reclaim correctness under load
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 5), st.integers(1, 9),
+                              st.integers(0, 4)), max_size=80),
+       policy_i=st.integers(0, 2))
+def test_property_churn_reclaim_frees_or_skips(ops, policy_i):
+    """alloc/share/register/reclaim/free churn under a seeded schedule,
+    ``check_invariants`` after every op, under all three policies.  The
+    eviction hook observes every reclaim: an evicted page must be
+    pinned-only (refcount 1) at eviction time — i.e. reclaim NEVER
+    evicts a still-mapped page — and the reclaimed counter must equal
+    the number of hook firings (every eviction freed a page)."""
+    policy = [lambda: None,
+              lambda: make_replacement_policy(
+                  "break_even", cost_model=cost_model(), M=40),
+              lambda: make_replacement_policy("belady")][policy_i]()
+    evicted = []
+    a = PagedAllocator(num_pages=10, page_size=4, policy=policy,
+                       on_evict=lambda k, pg, t, n: evicted.append(pg))
+    orig_on_evict = a.on_evict
+
+    def checked_evict(key, page, tokens, n_kvs):
+        # the fix's contract: eviction implies the pin is the ONLY ref
+        assert a._refs[page] == 1, (page, a._refs[page])
+        orig_on_evict(key, page, tokens, n_kvs)
+
+    a.on_evict = checked_evict
+    a.now = 0.0
+    for step, (rid, tokens, op) in enumerate(ops):
+        a.now = float(step)
+        if op == 0:
+            a.free(rid)
+        elif op == 1 and a.has(rid):
+            a.free_tail(rid, 1)
+        elif op == 2 and a.has(rid):
+            a.register_prefix(rid, [hash((rid, i, len(a.table(rid).pages)))
+                                    for i in range(len(a.table(rid).pages))])
+        elif op == 3 and len(a.prefix_cache) and not a.has(rid + 10):
+            # map a cached page into a fresh table (sharing pressure)
+            key = a.prefix_cache.eviction_order(a.now)[0]
+            page, _, _ = a.prefix_cache.entry(key)
+            a.share(rid + 10, [page], 4)
+        else:
+            try:
+                a.allocate(rid, tokens)
+            except OutOfPagesError:
+                pass
+        a.check_invariants()
+        assert a.stats["reclaimed"] == len(evicted)
+    for rid in range(16):
+        a.free(rid)
+    a.check_invariants()
+    # drain surviving pins through the reclaim path: with no tables
+    # left, every cached page is pinned-only and must free
+    try:
+        a.allocate(99, 40)
+        assert len(a.prefix_cache) == 0
+        a.free(99)
+    except OutOfPagesError:
+        pass
+    a.check_invariants()
+    assert a.stats["reclaimed"] == len(evicted)
+
+
+# --------------------------------------------------------------------- #
+# host demotion tier (swap store unit + engine loop)
+# --------------------------------------------------------------------- #
+
+def test_attach_host_hit_under_device_collided_key_is_a_miss():
+    """If a chain key is device-registered under DIFFERENT tokens (a
+    64-bit hash collision) while the host tier holds the matching
+    entry, the two-tier attach must treat it as a miss — promoting
+    would re-insert the occupied key and crash."""
+    from repro.core import attach_prefix_run
+
+    a = PagedAllocator(num_pages=4, page_size=2)
+    store = KVSwapStore()
+    key = PrefixCache.chain_keys([1, 2], 2)[0]
+    # device registry: key occupied by ANOTHER prompt's page (collision)
+    a.allocate(0, 2)
+    a.register_prefix(0, [key], [(7, 8)])
+    # host tier: the matching snapshot under the same key
+    store.put_prefix(key, (1, 2), 2, None, nbytes=4)
+    attached, promoted = attach_prefix_run(a, 5, [key], [(1, 2)],
+                                           host_tier=store)
+    assert (attached, promoted) == (0, 0)      # miss, no crash
+    assert store.has_prefix(key)               # host copy untouched
+    assert not a.has(5)
+    a.check_invariants()
+
+
+def test_swap_store_prefix_entries():
+    store = KVSwapStore(capacity_bytes=100)
+    e = store.put_prefix(5, (1, 2), 16, None, nbytes=60)
+    assert e.nbytes == 60 and store.nbytes == 60
+    assert store.has_prefix(5) and store.num_prefix_entries == 1
+    assert len(store) == 0                     # not suspend bookkeeping
+    with pytest.raises(ValueError):
+        store.put_prefix(5, (1, 2), 16, None, nbytes=1)
+    with pytest.raises(SwapStoreFullError):
+        store.put_prefix(6, (3, 4), 16, None, nbytes=60)
+    # token verification: a hash collision is a miss
+    assert store.peek_prefix(5, (9, 9)) is None
+    assert store.peek_prefix(5, (1, 2)) is e
+    store.check_invariants()
+    got = store.pop_prefix(5)
+    assert got is e and store.nbytes == 0
+    with pytest.raises(KeyError):
+        store.pop_prefix(5)
+    store.check_invariants()
+
+
+def test_engine_demotion_promotes_back_with_identical_tokens():
+    """Evicted prefix pages land in the host tier and are promoted back
+    on the next registry hit — charged swap_time in virtual time —
+    with outputs identical to the no-demotion run."""
+    wl_kw = dict(n=24, num_groups=6, page_size=8, seed=3)
+
+    def run(policy, demotion):
+        cfg, _, eng = build_engine(policy=policy, demotion=demotion)
+        res = eng.run(zipf_shared_prefix(vocab=cfg.vocab_size, **wl_kw))
+        return res, eng
+
+    res_off, eng_off = run("break_even", False)
+    res_on, eng_on = run("break_even", True)
+    assert res_on.outputs == res_off.outputs
+    assert eng_on.swap_stats["demotions"] > 0
+    assert eng_on.swap_stats["promotions"] > 0
+    assert eng_on.swap_stats["kv_promoted"] % 8 == 0
+    # promotion = more shared tokens than discarding evictions
+    assert eng_on.allocator.stats["prefix_shared_tokens"] \
+        > eng_off.allocator.stats["prefix_shared_tokens"]
+    # promotions were charged host-link time: virtual makespan grows
+    assert res_on.metrics.makespan > res_off.metrics.makespan
+    # host tier may legitimately hold demoted prefixes at end of run;
+    # suspend bookkeeping must still be clean
+    assert len(eng_on.swap_store) == 0
+
+
+def test_engine_demotion_store_full_falls_back():
+    """A full host store drops demotions (pages fall back to recompute
+    on the next miss) without corrupting outputs."""
+    cfg, _, eng_ref = build_engine(policy="break_even", demotion=False)
+    wl = zipf_shared_prefix(n=16, num_groups=6, page_size=8, seed=1,
+                            vocab=cfg.vocab_size)
+    res_ref = eng_ref.run(wl)
+    cfg, _, eng = build_engine(policy="break_even", demotion=True,
+                               swap_bytes=1)   # nothing fits
+    wl2 = zipf_shared_prefix(n=16, num_groups=6, page_size=8, seed=1,
+                             vocab=cfg.vocab_size)
+    res = eng.run(wl2)
+    assert res.outputs == res_ref.outputs
+    assert eng.swap_stats["demotions"] == 0
+    assert eng.swap_stats["demote_drops"] > 0
+    assert eng.swap_stats["promotions"] == 0
+
+
+# --------------------------------------------------------------------- #
+# simulator-vs-engine parity + cross-policy token identity (heavy)
+# --------------------------------------------------------------------- #
+
+def _page_nbytes(cfg, page_size):
+    import jax.numpy as jnp
+    return 2 * cfg.num_layers * page_size * cfg.num_kv_heads \
+        * cfg.head_dim_ * jnp.dtype(cfg.dtype).itemsize
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,demotion", [("lru", True),
+                                             ("break_even", True),
+                                             ("break_even", False)])
+def test_sim_engine_demotion_promotion_parity(policy, demotion):
+    """The simulator's PrefixTierSim shadow must agree with the paged
+    engine batch-for-batch: same demotion/promotion/reclaim counts, same
+    prefix hits, and the same virtual time (the swap_time charges land
+    in the same batches)."""
+    wl_kw = dict(n=24, num_groups=6, page_size=8, seed=3)
+    cfg, _, eng = build_engine(policy=policy, demotion=demotion)
+    res = eng.run(zipf_shared_prefix(vocab=cfg.vocab_size, **wl_kw))
+
+    cm = cost_model()
+    sched = make_scheduler("vllm", 256, S=512, replacement="srf",
+                           page_size=8, cache_policy=policy,
+                           cache_demotion=demotion)
+    sched.cfg.max_running = 4                  # engine slot cap
+    shadow = PrefixTierSim(sched.cfg, cm,
+                           page_nbytes=_page_nbytes(cfg, 8))
+    sim = simulate(sched, zipf_shared_prefix(vocab=cfg.vocab_size,
+                                             **wl_kw),
+                   cm, prefix_sim=shadow)
+
+    assert sim.prefix_stats["demotions"] == eng.swap_stats["demotions"]
+    assert sim.prefix_stats["promotions"] == eng.swap_stats["promotions"]
+    assert sim.prefix_stats["kv_promoted"] == eng.swap_stats["kv_promoted"]
+    assert sim.prefix_stats["demote_drops"] == eng.swap_stats["demote_drops"]
+    for key in ("prefix_hits", "prefix_shared_tokens", "reclaimed",
+                "reclaim_skipped", "cow_copies"):
+        assert sim.prefix_stats[key] == eng.allocator.stats[key], key
+    assert sim.makespan == pytest.approx(res.metrics.makespan, rel=1e-9)
+    # charges landed batch-for-batch, not just in total
+    eng_swaps = [b.swap_s for b in res.metrics.batches]
+    sim_swaps = [b.swap_s for b in sim.batches]
+    assert len(eng_swaps) == len(sim_swaps)
+    assert eng_swaps == pytest.approx(sim_swaps, rel=1e-9)
+
+
+@pytest.mark.slow
+def test_outputs_identical_across_policies_shared_prefix():
+    """Replacement policy and demotion tier must never change generated
+    tokens on the shared-prefix workloads (satellite contract)."""
+    outs = {}
+    for label, (policy, demotion) in {
+            "lru": ("lru", False), "be": ("break_even", False),
+            "bed": ("break_even", True)}.items():
+        cfg, _, eng = build_engine(M_kv=200, policy=policy,
+                                   demotion=demotion)
+        wl = shared_prefix(n=10, input_len=32, prefix_frac=0.75,
+                           output_len=6, vocab=cfg.vocab_size,
+                           stagger=1e-6, seed=5)
+        outs[label] = eng.run(wl).outputs
+    assert outs["lru"] == outs["be"] == outs["bed"]

@@ -133,9 +133,11 @@ def test_prefix_hit_verifies_tokens_against_hash_collision():
 
 
 def test_shared_prefix_attach_then_reclaim_keeps_sharer_data():
-    """Evicting a registry entry whose page a live table still maps must
-    NOT free the page out from under the sharer — only pinned-ONLY pages
-    return capacity."""
+    """A reclaim candidate whose page a live table still maps is
+    SKIPPED: evicting it frees no memory, so destroying the registry
+    entry would only burn the cache (the pre-fix behaviour).  Only
+    pinned-ONLY pages return capacity — and their entries are the only
+    ones evicted."""
     a = PagedAllocator(num_pages=4, page_size=2)
     keys = PrefixCache.chain_keys([5, 6, 7, 8], 2)
     a.allocate(0, 4)
@@ -143,15 +145,25 @@ def test_shared_prefix_attach_then_reclaim_keeps_sharer_data():
     a.free(0)                              # both pages cached
     pages = a.lookup_prefix(keys)
     a.share(1, pages[:1], 2)               # rid 1 maps only the first
-    a.allocate(2, 6)                       # 3 pages: forces reclaim of
-    #                                        BOTH registry entries
-    assert len(a.prefix_cache) == 0
+    a.allocate(2, 6)                       # 3 pages: reclaim pressure
+    # the still-mapped entry SURVIVES (skipped); only the pinned-only
+    # page was evicted, and only that one counted as reclaimed
+    assert len(a.prefix_cache) == 1
+    assert a.prefix_cache.get(keys[0]) == pages[0]
+    assert a.stats["reclaimed"] == 1
+    assert a.stats["reclaim_skipped"] >= 1
     assert a.table(1).pages == pages[:1]   # sharer keeps its page
     a.check_invariants()
-    # and the shared page only frees once the sharer lets go
+    # and the shared page only frees once the sharer lets go — then it
+    # still serves registry hits until genuinely reclaimed
     a.free(2)
     a.free(1)
+    assert a.free_pages == 3 and a.used_pages == 1   # cached prefix
+    a.allocate(3, 8)                       # now reclaimable: pinned-only
+    assert len(a.prefix_cache) == 0 and a.stats["reclaimed"] == 2
+    a.free(3)
     assert a.free_pages == 4
+    a.check_invariants()
 
 
 @settings(max_examples=100, deadline=None)
