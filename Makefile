@@ -1,6 +1,7 @@
-.PHONY: check test smoke
+.PHONY: check test smoke analyze
 
-# one offline regression command: tier-1 tests + smoke benchmarks
+# one offline regression command: static analysis + tier-1 tests +
+# smoke benchmarks
 check:
 	sh scripts/check.sh
 
@@ -8,4 +9,9 @@ test:
 	PYTHONPATH=src python -m pytest -x -q
 
 smoke:
-	python -m benchmarks.run --smoke
+	PYTHONPATH=src python -m benchmarks.run --smoke
+
+# repo-specific static analysis (fails on non-baselined findings);
+# see src/repro/analysis/README.md
+analyze:
+	PYTHONPATH=src python -m repro.analysis src/

@@ -60,6 +60,7 @@ def main(argv=None) -> int:
 
     t0 = time.time()
     failures = []
+    records = []
     ran = 0
     for name, mod, smoke_kw in MODULES:
         if args.filters and not any(f.lower() in name.lower()
@@ -71,15 +72,33 @@ def main(argv=None) -> int:
         t = time.time()
         try:
             mod.run(**(smoke_kw if args.smoke else {}))
+            status = "ok"
             print(f"[ok] {name} ({time.time()-t:.1f}s)")
         except Exception:
+            status = "fail"
             failures.append(name)
             traceback.print_exc()
             print(f"[FAIL] {name}")
+        records.append({"name": name, "module": mod.__name__,
+                        "status": status,
+                        "duration_s": round(time.time() - t, 2)})
     print(f"\n{'='*72}")
     mode = "smoke" if args.smoke else "full"
     print(f"benchmarks ({mode}): {ran-len(failures)}/{ran} passed "
           f"in {time.time()-t0:.0f}s")
+    if args.smoke and not args.filters:
+        # one consolidated artifact for the smoke gate: CI/check.sh can
+        # diff module-level status and spot pathological slowdowns
+        # without parsing per-figure JSONs
+        from benchmarks.common import save_json
+        save_json("BENCH_smoke", {
+            "mode": mode,
+            "passed": ran - len(failures),
+            "ran": ran,
+            "failed": failures,
+            "total_s": round(time.time() - t0, 2),
+            "modules": records,
+        })
     if failures:
         print("failed:", ", ".join(failures))
         return 1

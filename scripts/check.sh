@@ -1,15 +1,26 @@
 #!/usr/bin/env sh
 # Single offline regression entry point (also: `make check`):
-#   1. pytest suite — FAST tier by default (skips tests marked `slow`,
+#   1. static analysis — repo-specific checkers (recompile hazards,
+#      host syncs, charge audit, config mirroring); fails on any
+#      finding that is neither allow-annotated nor baselined
+#      (src/repro/analysis/README.md)
+#   2. pytest suite — FAST tier by default (skips tests marked `slow`,
 #      the heaviest cross-plane parity sweeps); set CHECK_FULL=1 to run
 #      the complete tier-1 suite (what `python -m pytest -x -q` runs)
-#   2. every figure benchmark at smoke sizes (includes fig_engine_wall
-#      and fig_prefix_sharing)
+#      plus the compiled-artifact audit (HLO scan + compile budget)
+#   3. every figure benchmark at smoke sizes (includes fig_engine_wall
+#      and fig_prefix_sharing); writes experiments/bench/BENCH_smoke.json
 # Extra arguments are forwarded to pytest (e.g. scripts/check.sh -k engine).
 set -e
 cd "$(dirname "$0")/.."
 
+echo "== static analysis =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis src/
+
 if [ -n "${CHECK_FULL:-}" ]; then
+    echo "== compiled-artifact audit =="
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis \
+        src/repro/analysis --artifact
     echo "== tier-1 tests (full) =="
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 else
@@ -19,4 +30,4 @@ else
 fi
 
 echo "== smoke benchmarks =="
-python -m benchmarks.run --smoke
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke

@@ -1,0 +1,7 @@
+"""Repo-specific static analysis: recompile hazards, host syncs,
+unpriced resource mutations, config mirroring, and (optionally) a
+compiled-artifact audit.  Run as ``python -m repro.analysis src/``.
+See ``src/repro/analysis/README.md``.
+"""
+from repro.analysis.findings import Finding  # noqa: F401
+from repro.analysis.runner import ALL_RULES, run_paths  # noqa: F401

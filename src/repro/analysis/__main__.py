@@ -1,0 +1,77 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit code 0 iff no blocking findings (not suppressed inline, not in the
+committed baseline).  ``--json`` for machine output, ``--write-baseline``
+to regenerate the grandfather file, ``--artifact`` to additionally run
+the compiled-artifact audit (builds a tiny engine; slow).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.findings import write_baseline
+from repro.analysis.runner import ALL_RULES, run_paths
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "analysis_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis "
+                    "(rules: %s)" % ", ".join(ALL_RULES))
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to scan (default: src/)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file (default: analysis_baseline.json "
+                         "at the repo root)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from this run and exit 0")
+    ap.add_argument("--artifact", action="store_true",
+                    help="also audit lowered HLO + compile count of a "
+                         "tiny engine run (slow; builds a model)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or [os.path.join(REPO_ROOT, "src")]
+    rules = args.rules.split(",") if args.rules else None
+
+    if args.write_baseline:
+        findings = run_paths(paths, rules=rules, baseline=None)
+        fps = write_baseline(args.baseline, findings)
+        print(f"wrote {len(fps)} fingerprints to {args.baseline}")
+        return 0
+
+    baseline = None if args.no_baseline else args.baseline
+    findings = run_paths(paths, rules=rules, baseline=baseline)
+
+    if args.artifact:
+        from repro.analysis.artifact import audit_artifacts
+        findings.extend(audit_artifacts())
+
+    blocking = [f for f in findings if f.blocking]
+    if args.json:
+        print(json.dumps({"findings": [f.to_dict() for f in findings],
+                          "blocking": len(blocking)}, indent=1))
+    else:
+        for f in findings:
+            print(f.render())
+        n_sup = sum(1 for f in findings if f.suppressed)
+        n_base = sum(1 for f in findings if f.baselined)
+        print(f"-- {len(findings)} findings: {len(blocking)} blocking, "
+              f"{n_sup} allowed inline, {n_base} baselined")
+    return 1 if blocking else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

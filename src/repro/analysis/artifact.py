@@ -1,0 +1,168 @@
+"""Checker 4 — the compiled-artifact audit (``--artifact``).
+
+The Python-level checkers can only see what the SOURCE does; this one
+audits what XLA actually built:
+
+* ``artifact-hlo`` — lower the serving cells (prefill + decode, the
+  same ``serve_step`` builders the engine jits) for a tiny reduced
+  model and scan the HLO text: any ``infeed``/``outfeed``/``send``/
+  ``recv`` op means a host round-trip got baked INTO the compiled
+  artifact (invisible to the host-sync checker), and any
+  ``custom_call_target`` outside the expected allowlist means
+  something escaped XLA's scheduler (a stray host callback or debug
+  hook serializes the whole entry point).
+
+* ``compile-budget`` — run a tiny engine workload per execution plane
+  and assert ``Engine.num_compiles`` against the checked-in budget
+  (``compile_budget.json``).  This is PR 2's shape-stability invariant
+  as a static gate: a dynamic shape sneaking into an entry point shows
+  up as extra distinct compiles long before any perf benchmark does.
+
+Budgets and the custom-call allowlist live in
+``src/repro/analysis/compile_budget.json``; regenerate by running with
+``REPRO_WRITE_COMPILE_BUDGET=1`` after an intentional change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List
+
+from repro.analysis.findings import Finding
+
+BUDGET_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "compile_budget.json")
+
+RULE_HLO = "artifact-hlo"
+RULE_BUDGET = "compile-budget"
+
+_MODEL = "tinyllama-1.1b"
+_PLANES = ("batched", "paged")
+
+
+def _tiny_engine(plane: str):
+    import jax
+    from repro.configs import get_config
+    from repro.core import (TheoreticalCostModel, get_hardware,
+                            make_scheduler)
+    from repro.models import model as M
+    from repro.serving import Engine, EngineConfig
+
+    cfg = dataclasses.replace(get_config(_MODEL).reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sched = make_scheduler("vllm", 256, S=512, replacement="srf")
+    ekw = dict(nslots=4, cache_len=64, chunk=16, plane=plane)
+    if plane == "paged":
+        ekw.update(page_size=8, cache_policy="lru", cache_demotion=True)
+    eng = Engine(cfg, params, sched, EngineConfig(**ekw),
+                 cost_model=TheoreticalCostModel(cfg,
+                                                 get_hardware("tpu_v5e")))
+    return cfg, eng
+
+
+def _run_tiny(plane: str) -> int:
+    from repro.data.workloads import zipf_shared_prefix
+    cfg, eng = _tiny_engine(plane)
+    eng.run(zipf_shared_prefix(n=10, num_groups=3, page_size=8, seed=3,
+                               vocab=cfg.vocab_size))
+    return eng.num_compiles
+
+
+def _lowered_hlo():
+    """(name, hlo_text) for the serving cells the engine compiles."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.models import model as M
+    from repro.serving import serve_step
+
+    cfg = dataclasses.replace(get_config(_MODEL).reduced(),
+                              dtype="float32")
+    params = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    out = []
+    pf = serve_step.build_prefill_fn(cfg, cache_len=64)
+    specs = serve_step.serve_input_specs(
+        cfg, ShapeConfig("audit_prefill", 16, 2, "prefill"))
+    out.append(("prefill",
+                jax.jit(pf).lower(params, specs).as_text()))
+    df = serve_step.build_decode_fn(cfg)
+    specs = serve_step.serve_input_specs(
+        cfg, ShapeConfig("audit_decode", 16, 2, "decode"))
+    out.append(("decode",
+                jax.jit(df).lower(params, specs["tokens"],
+                                  specs["cache"]).as_text()))
+    return out
+
+
+def audit_artifacts(budget_path: str = BUDGET_PATH) -> List[Finding]:
+    from repro.launch.hlo_analysis import custom_calls, host_transfer_ops
+
+    findings: List[Finding] = []
+    rel = os.path.relpath(budget_path,
+                          os.path.join(os.path.dirname(budget_path),
+                                       "..", "..", ".."))
+    try:
+        with open(budget_path) as f:
+            budget = json.load(f)
+    except FileNotFoundError:
+        budget = {}
+    write = bool(os.environ.get("REPRO_WRITE_COMPILE_BUDGET"))
+
+    allowed = set(budget.get("allowed_custom_calls", []))
+    seen_calls = set()
+    for name, hlo in _lowered_hlo():
+        transfers = host_transfer_ops(hlo)
+        if transfers:
+            findings.append(Finding(
+                rule=RULE_HLO, path=rel, line=1, col=1, symbol=name,
+                message=f"host-transfer ops baked into the lowered "
+                        f"{name} artifact: {transfers} — a compiled "
+                        f"serving entry point must not round-trip to "
+                        f"the host mid-step"))
+        calls = custom_calls(hlo)
+        seen_calls.update(calls)
+        unexpected = sorted(set(calls) - allowed)
+        if unexpected and not write:
+            findings.append(Finding(
+                rule=RULE_HLO, path=rel, line=1, col=1, symbol=name,
+                message=f"unexpected custom_call targets in the lowered "
+                        f"{name} artifact: {unexpected} (expected "
+                        f"subset of {sorted(allowed)}; regenerate "
+                        f"{rel} if intentional)"))
+
+    budgets = budget.get("num_compiles", {})
+    measured = {}
+    for plane in _PLANES:
+        n = _run_tiny(plane)
+        measured[plane] = n
+        cap = budgets.get(plane)
+        if cap is None and not write:
+            findings.append(Finding(
+                rule=RULE_BUDGET, path=rel, line=1, col=1, symbol=plane,
+                message=f"no compile budget recorded for plane "
+                        f"'{plane}' (measured {n}); set "
+                        f"REPRO_WRITE_COMPILE_BUDGET=1 to record"))
+        elif cap is not None and n > cap:
+            findings.append(Finding(
+                rule=RULE_BUDGET, path=rel, line=1, col=1, symbol=plane,
+                message=f"plane '{plane}' compiled {n} distinct XLA "
+                        f"programs on the audit workload, budget is "
+                        f"{cap} — a dynamic shape is leaking into a "
+                        f"jitted entry point (PR 2 shape-stability)"))
+
+    if write:
+        with open(budget_path, "w") as f:
+            json.dump({"note": "compiled-artifact audit budget; "
+                               "regenerate with "
+                               "REPRO_WRITE_COMPILE_BUDGET=1 "
+                               "python -m repro.analysis --artifact",
+                       "num_compiles": measured,
+                       "allowed_custom_calls": sorted(allowed
+                                                      | seen_calls)},
+                      f, indent=1)
+            f.write("\n")
+    return findings

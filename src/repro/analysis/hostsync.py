@@ -1,0 +1,169 @@
+"""Checker 2 — hidden host synchronizations in the serving hot path.
+
+ROADMAP item 1's diagnosis of the prefix-sharing regression was a class
+of bug no parity test catches: the virtual-time cost model charges a
+``swap_time`` for host traffic, but a *synchronous* ``jax.device_get``
+also stalls the device pipeline on the WALL clock — the win exists in
+the metrics (pages, hits) while the measured tok/s gets eaten.  This
+checker makes every device→host synchronization in the hot path
+(``serving/`` and ``core/kvcache.py``) explicit: each one is either a
+finding or carries an ``# repro: allow-host-sync(<reason>)`` rationale
+saying why blocking there is the design (e.g. the double-buffer's drain
+boundary, or a restore that must complete before compute reads it).
+
+Flagged (outside jit-reachable functions — inside them the recompile
+checker owns the diagnosis):
+
+* ``jax.device_get(...)`` — synchronous D2H copy;
+* ``jax.block_until_ready(...)`` / ``x.block_until_ready()`` —
+  explicit pipeline stall;
+* ``np.asarray`` / ``np.array`` over device-resident values — an
+  IMPLICIT device_get.  Device-residency is a per-module taint: names
+  assigned from ``jnp.*`` / jitted entry-point calls, ``self``
+  attributes assigned such values anywhere in the class (the engine's
+  ``cache`` / ``k_pools`` / ``v_pools``), and ``jax.tree`` views of
+  either.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.astutil import (ModuleIndex, dotted_name, free_names,
+                                    last_attr)
+from repro.analysis.findings import Finding
+
+RULE = "host-sync"
+
+#: files the rule applies to (the serving hot path); everything else is
+#: offline tooling where a sync is harmless
+HOT_PATHS = ("serving/", "core/kvcache.py")
+
+_ASARRAY = {"asarray", "array"}
+_NP_MODULES = {"np", "numpy", "onp"}
+
+
+def in_scope(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return any(h in norm for h in HOT_PATHS)
+
+
+def _device_attrs(mod: ModuleIndex) -> Set[str]:
+    """self.<attr> names assigned device-producing values anywhere."""
+    attrs: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.Assign, ast.AugAssign)):
+            continue
+        value = node.value
+        if not _device_producing(mod, value, set(), attrs):
+            continue
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        for t in targets:
+            for el in (t.elts if isinstance(t, ast.Tuple) else [t]):
+                if isinstance(el, ast.Attribute) \
+                        and isinstance(el.value, ast.Name) \
+                        and el.value.id == "self":
+                    attrs.add(el.attr)
+    return attrs
+
+
+def _device_producing(mod: ModuleIndex, node: ast.AST,
+                      tainted: Set[str], device_attrs: Set[str]) -> bool:
+    """Heuristic: does this expression yield a device array?"""
+    for n in ast.walk(node):
+        name = ""
+        if isinstance(n, ast.Call):
+            name = dotted_name(n.func)
+        elif isinstance(n, (ast.Attribute, ast.Name)):
+            name = dotted_name(n)
+        if not name:
+            continue
+        head, bare = name.split(".")[0], last_attr(name)
+        if head in ("jnp", "jax") and bare not in ("device_get",):
+            return True
+        if bare in mod.jit_handles:
+            return True
+        if isinstance(n, ast.Attribute) and isinstance(n.value, ast.Name) \
+                and n.value.id == "self" and n.attr in device_attrs:
+            return True
+        if isinstance(n, ast.Name) and n.id in tainted:
+            return True
+    return False
+
+
+def check_module(mod: ModuleIndex) -> List[Finding]:
+    if not in_scope(mod.path):
+        return []
+    out: List[Finding] = []
+    reachable = mod.jit_reachable()
+    device_attrs = _device_attrs(mod)
+
+    for qual, info in sorted(mod.functions.items()):
+        if qual in reachable:
+            continue                    # the recompile checker's domain
+        tainted = _taint_locals(mod, info, device_attrs)
+        for node in _own_body(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            bare = last_attr(name)
+            if name in ("jax.device_get", "device_get"):
+                out.append(_f(mod, node, qual,
+                              "synchronous `jax.device_get` stalls the "
+                              "device pipeline (route through the "
+                              "async_swap double-buffer, or annotate)"))
+            elif bare == "block_until_ready":
+                out.append(_f(mod, node, qual,
+                              "`block_until_ready` is an explicit "
+                              "pipeline stall in the hot path"))
+            elif _np_asarray(name) and node.args:
+                arg = node.args[0]
+                if _device_producing(mod, arg, tainted, device_attrs):
+                    out.append(_f(mod, node, qual,
+                                  f"`{name}` over a device-resident "
+                                  f"value is an implicit synchronous "
+                                  f"device_get"))
+    return out
+
+
+def _taint_locals(mod: ModuleIndex, info, device_attrs: Set[str]
+                  ) -> Set[str]:
+    """Local names assigned device-producing expressions (one forward
+    pass; enough for the hot path's straight-line staging code)."""
+    tainted: Set[str] = set()
+    assigns = sorted((n for n in _own_body(info.node)
+                      if isinstance(n, ast.Assign)),
+                     key=lambda n: n.lineno)
+    for _ in range(2):                  # second pass settles chains
+        for node in assigns:
+            if _device_producing(mod, node.value, tainted, device_attrs):
+                for t in node.targets:
+                    for el in (t.elts if isinstance(t, ast.Tuple) else [t]):
+                        if isinstance(el, ast.Name):
+                            tainted.add(el.id)
+    return tainted
+
+
+def _np_asarray(name: str) -> bool:
+    if "." not in name:
+        return False
+    mod_part, attr = name.rsplit(".", 1)
+    return attr in _ASARRAY and last_attr(mod_part) in _NP_MODULES
+
+
+def _own_body(fn_node: ast.AST):
+    work = list(ast.iter_child_nodes(fn_node))
+    while work:
+        node = work.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        yield node
+        work.extend(ast.iter_child_nodes(node))
+
+
+def _f(mod: ModuleIndex, node: ast.AST, qual: str,
+       message: str) -> Finding:
+    return Finding(rule=RULE, path=mod.path, line=node.lineno,
+                   col=node.col_offset + 1, symbol=qual, message=message)

@@ -1,0 +1,238 @@
+"""Checker 1 — recompile hazards inside jit boundaries.
+
+PR 2's headline invariant is that the engine's distinct-XLA-compile
+count is a small CONSTANT: shape-stable bucketed entry points, masked
+inert rows, fused sampling.  Nothing enforces that statically — a
+regression only shows up when the compile-count regression test runs a
+whole engine workload.  This checker guards the invariant at lint time:
+
+* ``recompile-hazard`` — inside any function reachable from a
+  ``jax.jit`` / ``pmap`` / ``shard_map`` boundary (call graph +
+  ``lax.scan``-style callbacks):
+
+  - host materialization of traced values: ``.item()`` / ``.tolist()``,
+    ``np.asarray`` / ``np.array``, ``jax.device_get``, and
+    ``int()``/``float()``/``bool()`` over non-static expressions.  Under
+    trace these either raise ``ConcretizationTypeError`` or silently
+    force a constant — re-specializing (recompiling) per value.
+  - Python ``if``/``while`` on traced values.  Branching on ``.shape``
+    / ``.ndim`` / ``.dtype`` / ``len(...)`` / ``is None`` / dict
+    membership is STATIC under trace and allowed; branching on array
+    *values* bakes the branch into the compiled artifact.
+  - f-string interpolation of traced values (shape/value interpolation
+    into a jitted closure concretizes, and a changing string constant
+    re-keys the trace).
+
+* ``dynamic-shape`` — in any function that CALLS a compiled entry
+  point (a name bound from ``jax.jit(...)``, e.g. the engine's
+  ``self._prefill_many``): a ``jnp.asarray``/``np.asarray`` over a
+  dynamic-length expression (a slice, list literal, comprehension or
+  concatenation).  Every distinct length compiles a fresh XLA
+  signature — the PR-2 contract is that token buffers are staged into
+  fixed ``(nslots, bucket)`` grids from the bucket ladder first.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.astutil import (ModuleIndex, dotted_name, free_names,
+                                    last_attr)
+from repro.analysis.findings import Finding
+
+RULE = "recompile-hazard"
+RULE_SHAPE = "dynamic-shape"
+
+#: parameters that hold configs / backend selectors, not traced arrays
+STATIC_PARAM_NAMES = {"self", "cls", "cfg", "config", "scfg", "ecfg",
+                      "hw", "impl", "moe_impl", "mode", "axis", "name"}
+#: attribute accesses that are static under trace
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "at"}
+STATIC_CALLS = {"len", "isinstance", "getattr", "hasattr", "type",
+                "range", "enumerate", "zip"}
+_ASARRAY = {"asarray", "array"}
+_NP_MODULES = {"np", "numpy", "onp"}
+
+
+def _is_static_use(mod: ModuleIndex, name_node: ast.AST,
+                   stop: ast.AST) -> bool:
+    """True when this reference to a traced candidate resolves to
+    trace-static information (shape/ndim/dtype/len/identity/membership)."""
+    node = name_node
+    while node is not None and node is not stop:
+        parent = mod.parent(node)
+        if isinstance(parent, ast.Attribute) and parent.value is node \
+                and parent.attr in STATIC_ATTRS:
+            return True
+        if isinstance(parent, ast.Call) and node is not parent.func \
+                and last_attr(dotted_name(parent.func)) in STATIC_CALLS:
+            return True
+        if isinstance(parent, ast.Compare) \
+                and all(isinstance(op, (ast.Is, ast.IsNot, ast.In,
+                                        ast.NotIn))
+                        for op in parent.ops):
+            return True
+        node = parent
+    return False
+
+
+def _traced_candidates(info) -> Set[str]:
+    return {p for p in info.params if p not in STATIC_PARAM_NAMES
+            and not p.startswith("_")}
+
+
+def _np_asarray(call: ast.Call) -> bool:
+    name = dotted_name(call.func)
+    if "." not in name:
+        return False
+    mod_part, attr = name.rsplit(".", 1)
+    return attr in _ASARRAY and last_attr(mod_part) in _NP_MODULES
+
+
+def _dynamic_length(node: ast.AST) -> bool:
+    """Expressions whose length depends on runtime values."""
+    if isinstance(node, ast.Subscript):
+        sl = node.slice
+        return isinstance(sl, ast.Slice) or isinstance(sl, ast.Tuple) \
+            and any(isinstance(e, ast.Slice) for e in sl.elts)
+    if isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+        return True
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return any(_dynamic_length(e) for e in node.elts)
+    if isinstance(node, ast.BinOp):
+        return _dynamic_length(node.left) or _dynamic_length(node.right)
+    if isinstance(node, ast.Call) \
+            and last_attr(dotted_name(node.func)) == "list":
+        return True
+    return False
+
+
+def check_module(mod: ModuleIndex) -> List[Finding]:
+    out: List[Finding] = []
+    reachable = mod.jit_reachable()
+
+    for qual in sorted(reachable):
+        info = mod.functions.get(qual)
+        if info is None:
+            continue
+        candidates = _traced_candidates(info)
+        out.extend(_check_jitted_fn(mod, info, candidates))
+
+    out.extend(_check_entry_point_calls(mod))
+    return out
+
+
+def _check_jitted_fn(mod: ModuleIndex, info, candidates) -> List[Finding]:
+    out: List[Finding] = []
+    own_nodes = _own_body(info.node)
+
+    for node in own_nodes:
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            bare = last_attr(name)
+            if bare in ("item", "tolist"):
+                out.append(_f(mod, node, info,
+                              f"`.{bare}()` inside a jitted computation "
+                              f"forces the traced value to the host"))
+            elif name in ("jax.device_get", "device_get"):
+                out.append(_f(mod, node, info,
+                              "`jax.device_get` inside a jitted "
+                              "computation is a host round-trip"))
+            elif _np_asarray(node):
+                out.append(_f(mod, node, info,
+                              f"`{name}` inside a jitted computation "
+                              f"materializes the traced value on host "
+                              f"(use jnp, or hoist out of the jit)"))
+            elif bare in ("int", "float", "bool") and "." not in name \
+                    and node.args and not isinstance(node.args[0],
+                                                     ast.Constant):
+                arg = node.args[0]
+                names = free_names(arg) & candidates
+                refs = [n for n in ast.walk(arg)
+                        if isinstance(n, ast.Name) and n.id in names]
+                if any(not _is_static_use(mod, r, node) for r in refs):
+                    out.append(_f(mod, node, info,
+                                  f"`{bare}()` over traced value "
+                                  f"{sorted(names)} concretizes under "
+                                  f"trace (recompile per value)"))
+        elif isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            names = free_names(test) & candidates
+            refs = [n for n in ast.walk(test)
+                    if isinstance(n, ast.Name) and n.id in names]
+            bad = [r.id for r in refs
+                   if not _is_static_use(mod, r, test)
+                   and not _is_static_use(mod, r, node)]
+            if bad:
+                out.append(_f(mod, node, info,
+                              f"Python branch on traced value "
+                              f"{sorted(set(bad))} inside a jitted "
+                              f"computation (use jnp.where / lax.cond; "
+                              f"shape/ndim/dtype branches are fine)"))
+        elif isinstance(node, ast.JoinedStr):
+            for part in node.values:
+                if not isinstance(part, ast.FormattedValue):
+                    continue
+                names = free_names(part.value) & candidates
+                refs = [n for n in ast.walk(part.value)
+                        if isinstance(n, ast.Name) and n.id in names]
+                bad = [r.id for r in refs
+                       if not _is_static_use(mod, r, part)]
+                if bad:
+                    out.append(_f(mod, node, info,
+                                  f"f-string interpolates traced value "
+                                  f"{sorted(set(bad))} inside a jitted "
+                                  f"computation (concretizes; re-keys "
+                                  f"the trace)"))
+                    break
+    return out
+
+
+def _check_entry_point_calls(mod: ModuleIndex) -> List[Finding]:
+    """dynamic-shape: unbucketed dynamic-length arrays staged in
+    functions that drive compiled entry points."""
+    out: List[Finding] = []
+    if not mod.jit_handles:
+        return out
+    for qual, info in sorted(mod.functions.items()):
+        calls_handle = any(last_attr(c) in mod.jit_handles
+                           for c in info.calls)
+        if not calls_handle:
+            continue
+        for node in _own_body(info.node):
+            if not (isinstance(node, ast.Call)
+                    and last_attr(dotted_name(node.func)) in _ASARRAY
+                    and node.args):
+                continue
+            src = node.args[0]
+            if _dynamic_length(src):
+                handles = sorted({last_attr(c) for c in info.calls
+                                  if last_attr(c) in mod.jit_handles})
+                out.append(Finding(
+                    rule=RULE_SHAPE, path=mod.path, line=node.lineno,
+                    col=node.col_offset + 1, symbol=qual,
+                    message="dynamic-length array staged in a function "
+                            f"driving compiled entry points {handles}: "
+                            "every distinct length compiles a fresh XLA "
+                            "signature — pad into a fixed (nslots, "
+                            "bucket) grid from the bucket ladder"))
+    return out
+
+
+def _own_body(fn_node: ast.AST):
+    """All nodes of a function EXCLUDING nested function bodies (those
+    are indexed and checked as their own functions)."""
+    work = list(ast.iter_child_nodes(fn_node))
+    while work:
+        node = work.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        yield node
+        work.extend(ast.iter_child_nodes(node))
+
+
+def _f(mod: ModuleIndex, node: ast.AST, info, message: str) -> Finding:
+    return Finding(rule=RULE, path=mod.path, line=node.lineno,
+                   col=node.col_offset + 1, symbol=info.qualname,
+                   message=message)

@@ -480,20 +480,21 @@ def attach_prefix_run(alloc: PagedAllocator, rid: int,
             entry = host_tier.peek_prefix(key, toks)
             if entry is not None:
                 try:
+                    # repro: allow-unpriced-mutation(priced by the caller - promoted tokens are returned and charged swap_time into the batch, parity-tested engine vs simulator)
                     page = alloc.promote_prefix(key, entry.tokens,
                                                 entry.n_kvs)
                 except OutOfPagesError:
                     break               # nothing evictable: stop the run
-                host_tier.pop_prefix(key)
+                host_tier.pop_prefix(key)  # repro: allow-unpriced-mutation(the promotion above carries the charge; the pop only hands the entry over)
                 if restore is not None:
                     restore(page, entry.kv)
                 from_host = True
         if page is None:
             break
         if attached == 0:
-            alloc.share(rid, [page], pg)
+            alloc.share(rid, [page], pg)  # repro: allow-unpriced-mutation(sharing maps an existing device page - no bytes move; attached tokens are returned for the caller's prefix_stats)
         else:
-            alloc.extend_shared(rid, page, pg)
+            alloc.extend_shared(rid, page, pg)  # repro: allow-unpriced-mutation(same zero-copy mapping as the share above)
         attached += pg
         if from_host:
             promoted += pg

@@ -207,15 +207,15 @@ class PrefixTierSim:
     def preempts(self, batch: Batch) -> None:
         for r, npg, _, _ in batch.partial_preempted:
             if r.running:       # folded sheds free with the full preempt
-                self.alloc.free_tail(r.rid, npg)
+                self.alloc.free_tail(r.rid, npg)  # repro: allow-unpriced-mutation(shadow replay of the engine shed; the scheduler already priced the preemption swap_time when it chose the victim)
         for v in batch.preempted:
-            self.alloc.free(v.rid)
+            self.alloc.free(v.rid)  # repro: allow-unpriced-mutation(shadow replay of engine _release; freeing moves no bytes and the preemption was priced at victim selection)
 
     def swap_restores(self, swapped_in, tail_in) -> None:
         for r in swapped_in:
-            self.alloc.allocate(r.rid, r.suspended_m)
+            self.alloc.allocate(r.rid, r.suspended_m)  # repro: allow-unpriced-mutation(shadow replay of the engine swap-in; simulate() charges swap_time for the restore in the batch price)
         for r in tail_in:
-            self.alloc.allocate(r.rid, r.tail_suspended_m)
+            self.alloc.allocate(r.rid, r.tail_suspended_m)  # repro: allow-unpriced-mutation(same priced restore as the full swap-in above)
 
     def pre_items(self, prefill_items, decode_items) -> None:
         """Claim-time control plane of the engine: prefix attach (device
@@ -257,10 +257,11 @@ class PrefixTierSim:
         n = min(m_new, r.input_len) // self.pg
         if n > 0 and self.alloc.has(r.rid):
             keys, ptoks = self._chain(r)
+            # repro: allow-unpriced-mutation(registration moves no bytes - mirrors the engine's annotated _register_prefix; charges accrue at demotion/promotion)
             self.alloc.register_prefix(r.rid, keys[:n], ptoks[:n])
 
     def on_finish(self, r: Request) -> None:
-        self.alloc.free(r.rid)
+        self.alloc.free(r.rid)  # repro: allow-unpriced-mutation(completion frees pages without host traffic - mirrors the engine's annotated _release)
 
     def result_stats(self) -> Dict[str, float]:
         return {**self.stats, **self.alloc.stats}

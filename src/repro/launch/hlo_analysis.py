@@ -219,3 +219,42 @@ def duplicate_op_fraction(hlo_text: str) -> float:
             dup += 1
         base.add(root)
     return dup / len(dots)
+
+
+def custom_calls(hlo_text: str) -> Dict[str, int]:
+    """custom_call target -> occurrence count.
+
+    Custom calls are where XLA escapes its own fusion/scheduling —
+    Pallas kernels show up here (expected, by target name), but so do
+    host callbacks and debugging hooks that silently serialize the
+    engine's jitted entry points.  The artifact audit diffs this
+    against an expected-target allowlist."""
+    out: Dict[str, int] = {}
+    for m in re.finditer(r'custom_call_target="([^"]+)"', hlo_text):
+        out[m.group(1)] = out.get(m.group(1), 0) + 1
+    return out
+
+
+#: op mnemonics that move data across the device/host boundary or pin
+#: the schedule to host progress
+HOST_TRANSFER_OPS = ("infeed", "outfeed", "send", "send-done", "recv",
+                     "recv-done")
+
+
+def host_transfer_ops(hlo_text: str) -> Dict[str, int]:
+    """Host-boundary ops in the lowered module, name -> count.
+
+    A compiled serving entry point should contain NONE of these: the
+    engine stages all tokens/tables device-side before the call and
+    fetches results after it.  Any hit means a host round-trip got
+    baked INTO the artifact — invisible to the Python-level host-sync
+    checker, caught here."""
+    out: Dict[str, int] = {}
+    for op in HOST_TRANSFER_OPS:
+        # whitespace-preceded mnemonic directly applied to operands —
+        # matches the op position (`... = <type> send(...)`) but not
+        # value references (`%send.1`) or longer mnemonics (send-done)
+        n = len(re.findall(r"(?<=\s)%s\(" % re.escape(op), hlo_text))
+        if n:
+            out[op] = n
+    return out

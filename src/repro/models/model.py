@@ -114,7 +114,7 @@ def _block_full(cfg: ModelConfig, lp: Params, x: jnp.ndarray,
         y = 0.5 * (rms_norm(a, lp["ln_attn"], cfg.norm_eps)
                    + rms_norm(s, lp["ln_ssm"], cfg.norm_eps))
         x = x + y
-        if cache_len:
+        if cache_len:  # repro: allow-recompile-hazard(cache_len is a static Python int closed over per plane; one specialization per cache length by design)
             new_cache = {"k": kv["k"], "v": kv["v"],
                          "h": ssm_state["h"], "conv": ssm_state["conv"]}
     else:
@@ -122,7 +122,7 @@ def _block_full(cfg: ModelConfig, lp: Params, x: jnp.ndarray,
                                     prefix_len=prefix_len, impl=impl,
                                     cache_len=cache_len)
         x = x + a
-        if cache_len:
+        if cache_len:  # repro: allow-recompile-hazard(cache_len is a static Python int closed over per plane; one specialization per cache length by design)
             new_cache = {"k": kv["k"], "v": kv["v"]}
     h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
     x = x + _mlp_or_moe(cfg, lp, h2, moe_impl)

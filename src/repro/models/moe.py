@@ -196,7 +196,7 @@ def apply_moe_sparse(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     E, K = cfg.padded_experts, cfg.experts_per_token
     T = B * S
     xt = x.reshape(T, d)
-    C = max(1, int(capacity_factor * T * K / E))
+    C = max(1, int(capacity_factor * T * K / E))  # repro: allow-recompile-hazard(capacity_factor is a static Python float kwarg; C is host arithmetic fixing the dispatch shape, one trace per factor)
 
     logits = (xt @ params["router"]).astype(jnp.float32)
     if E > cfg.num_experts:

@@ -66,10 +66,10 @@ def _ssm_core_scan(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 def pick_chunk(S: int, pref: int) -> int:
     """Largest power-of-two divisor of S that is <= pref (>= 1)."""
-    if S <= pref:
+    if S <= pref:  # repro: allow-recompile-hazard(S and pref are static Python ints from .shape; chunk picking is trace-time shape arithmetic)
         return S
     q = pref
-    while q > 1 and S % q != 0:
+    while q > 1 and S % q != 0:  # repro: allow-recompile-hazard(same trace-time shape arithmetic as above)
         q //= 2
     return max(q, 1)
 

@@ -285,6 +285,12 @@ class Engine:
         # pressure (more than two transfers in flight).
         self._pending_swaps: "OrderedDict[int, Tuple[SwapEntry, int]]" = \
             OrderedDict()
+        # in-flight async prefix-page demotions (chain key -> enqueue
+        # step): the PrefixPageEntry's kv leaves stay device arrays
+        # mid-D2H; finalized alongside _pending_swaps at the same drain
+        # boundaries.  A promotion that lands before the drain simply
+        # pops the entry — the bytes never round-trip.
+        self._pending_demotes: "OrderedDict[int, int]" = OrderedDict()
         self._step_no = 0
         # measured host-transfer wall times (fig08 validation column);
         # promotions/demotions are the prefix cache's host-tier traffic
@@ -421,7 +427,7 @@ class Engine:
         slot = self.slot_of.pop(rid, None)
         if slot is not None:
             self.free_slots.append(slot)
-        self.allocator.free(rid)
+        self.allocator.free(rid)  # repro: allow-unpriced-mutation(releasing pages moves no bytes; the preemption decision that led here was already charged - swap_time or refill compute - by the scheduler)
         # refill restarts from scratch: drop generated tokens beyond prompt?
         # NO — generated tokens are kept and re-prefilled (paper §3 refill).
 
@@ -449,11 +455,12 @@ class Engine:
                     leaf.copy_to_host_async()
                 self._pending_swaps[victim.rid] = (entry, self._step_no)
             else:
-                snap = jax.device_get(snap)
+                snap = jax.device_get(snap)  # repro: allow-host-sync(the synchronous swap-out path async_swap=False selects; charged swap_time in virtual time and measured into wall_out_s)
                 self.swap_store.put(victim.rid, snap,
                                     self.token_ids[victim.rid],
                                     victim.suspended_m)
                 if self.ecfg.check_invariants:
+                    # repro: allow-host-sync(invariant check reads the already-fetched host snapshot; no extra device traffic)
                     assert int(np.asarray(snap["index"])[0]) \
                         == victim.suspended_m, \
                         (victim.rid, snap["index"], victim.suspended_m)
@@ -481,7 +488,9 @@ class Engine:
         arrays.  ``rid`` drains one entry (same-window re-admission,
         double-buffer pressure); ``before_step`` drains entries enqueued
         before that step (the end-of-step boundary); neither drains
-        everything (end of run)."""
+        everything (end of run).  In-flight prefix demotions share the
+        ``before_step`` / drain-all boundaries (``rid`` is a slot-plane
+        concept; demotes drain per chain key via ``_drain_demotes``)."""
         if rid is not None:
             rids = [rid] if rid in self._pending_swaps else []
         elif before_step is not None:
@@ -492,11 +501,35 @@ class Engine:
         for r in rids:
             entry, _ = self._pending_swaps.pop(r)
             t0 = time.perf_counter()
-            entry.cache = jax.device_get(entry.cache)
+            # the drain IS the double-buffer boundary: the one place the
+            # slot plane may block on its own already-started D2H copy
+            entry.cache = jax.device_get(entry.cache)  # repro: allow-host-sync(async swap-out drain boundary - blocks only on a D2H copy started a step earlier, overlapped with that step's compute)
             if self.ecfg.check_invariants:
                 assert int(np.asarray(entry.cache["index"])[0]) \
                     == entry.num_kv, (r, entry.cache["index"], entry.num_kv)
             self.swap_stats["wall_out_s"] += time.perf_counter() - t0
+        if rid is None:
+            if before_step is not None:
+                keys = [k for k, s in self._pending_demotes.items()
+                        if s < before_step]
+            else:
+                keys = list(self._pending_demotes)
+            for k in keys:
+                self._drain_demotes(key=k)
+
+    def _drain_demotes(self, key: int) -> None:
+        """Finalize one in-flight prefix-page demotion: block on the
+        async D2H copy and replace the entry's device leaves with host
+        arrays.  A key whose entry was promoted (or discarded) before
+        the drain is simply forgotten — its bytes never round-tripped,
+        and ``pop_prefix`` already settled the byte accounting."""
+        self._pending_demotes.pop(key, None)
+        entry = self.swap_store.peek_prefix(key)
+        if entry is None:
+            return
+        t0 = time.perf_counter()
+        entry.kv = jax.device_get(entry.kv)  # repro: allow-host-sync(async demotion drain boundary - blocks only on its own already-started D2H page copy)
+        self.swap_stats["wall_demote_s"] += time.perf_counter() - t0
 
     def _swap_in(self, r: Request) -> None:
         """Restore r's snapshot into a free slot; no refill is needed."""
@@ -509,7 +542,7 @@ class Engine:
         slot = self._claim_slot(r.rid, reset=False)  # fully overwritten
         upd = jax.tree.map(jnp.asarray, entry.cache)
         self.cache = self._slot_write(self.cache, upd, jnp.int32(slot))
-        jax.block_until_ready(self.cache["index"])
+        jax.block_until_ready(self.cache["index"])  # repro: allow-host-sync(restore barrier - the slot must be fully written before this step's compute reads it; measured into wall_in_s)
         self.allocator.allocate(r.rid, entry.num_kv)
         restored = r.resume()
         if self.ecfg.check_invariants:
@@ -537,8 +570,8 @@ class Engine:
 
     def _snapshot_pages(self, page_ids) -> Dict[str, np.ndarray]:
         ids = np.asarray(page_ids, np.int32)
-        return {"k": np.asarray(self.k_pools[:, ids]),
-                "v": np.asarray(self.v_pools[:, ids])}
+        return {"k": np.asarray(self.k_pools[:, ids]),   # repro: allow-host-sync(the synchronous page gather of pooled suspends; prefix demotions route around it under async_swap)
+                "v": np.asarray(self.v_pools[:, ids])}   # repro: allow-host-sync(same sync gather as the k plane above)
 
     def _restore_pages(self, page_ids, kv) -> None:
         ids = jnp.asarray(np.asarray(page_ids, np.int32))
@@ -552,9 +585,9 @@ class Engine:
         False when the store is full — the victim (and any stored tail
         runs) falls back to discard-and-recompute.
 
-        Pooled snapshots are SYNCHRONOUS device_get copies —
-        ``async_swap`` double-buffering currently covers only the slot
-        planes' whole-slot snapshots."""
+        Pooled suspend snapshots are SYNCHRONOUS device_get copies —
+        ``async_swap`` double-buffering covers the slot planes'
+        whole-slot snapshots and the prefix tier's page demotions."""
         t0 = time.perf_counter()
         tbl = self.allocator.table(victim.rid)
         device_tokens = tbl.num_tokens
@@ -676,14 +709,33 @@ class Engine:
         instead of discarding its KV.  A full store drops the demotion —
         the page falls back to recompute-on-next-miss, the pre-demotion
         behaviour.  Charged ``swap_time(page_size)`` in virtual time
-        (folded into the current batch) and measured on the wall."""
+        (folded into the current batch) and measured on the wall.
+
+        With ``async_swap`` the snapshot is a device-side page gather
+        (a fresh immutable buffer, so the pool slot can be reused
+        immediately) whose host copy is started here and finalized at
+        the next drain boundary; capacity is charged from array
+        metadata so the full-store drop stays synchronous.  Without it,
+        the gather is a blocking ``device_get`` on the eviction path —
+        the stall ROADMAP item 1 measured eating the prefix-sharing
+        win."""
         if self.swap_store.has_prefix(key):
             return          # an identical snapshot is already host-resident
         t0 = time.perf_counter()
         try:
             self._check_run_capacity(1)     # metadata check BEFORE the D2H
-            self.swap_store.put_prefix(key, tokens, n_kvs,
-                                       self._snapshot_pages([page]))
+            if self.ecfg.async_swap:
+                ids = jnp.asarray([page], jnp.int32)
+                kv = {"k": self.k_pools[:, ids], "v": self.v_pools[:, ids]}
+                self.swap_store.put_prefix(
+                    key, tokens, n_kvs, kv,
+                    nbytes=kv["k"].nbytes + kv["v"].nbytes)
+                kv["k"].copy_to_host_async()
+                kv["v"].copy_to_host_async()
+                self._pending_demotes[key] = self._step_no
+            else:
+                self.swap_store.put_prefix(key, tokens, n_kvs,
+                                           self._snapshot_pages([page]))
         except SwapStoreFullError:
             self.swap_stats["demote_drops"] += 1
             return
@@ -692,6 +744,10 @@ class Engine:
         self.swap_stats["demotions"] += 1
         self.swap_stats["kv_demoted"] += pg
         self.swap_stats["wall_demote_s"] += time.perf_counter() - t0
+        # double buffering, as in _swap_out: finalize the oldest
+        # transfer(s) outside the timed enqueue window above
+        while len(self._pending_demotes) > 2:
+            self._drain_demotes(key=next(iter(self._pending_demotes)))
 
     def _promote_restore(self, page: int, kv) -> None:
         t0 = time.perf_counter()
@@ -731,6 +787,7 @@ class Engine:
         (generated-token pages are never shared)."""
         n = min(m_new, r.input_len) // self.ecfg.page_size
         if n > 0 and self.allocator.has(r.rid):
+            # repro: allow-unpriced-mutation(registration moves no bytes - the pages already live on device, owned by rid; charges accrue at eviction/demotion/promotion)
             self.allocator.register_prefix(r.rid, self._page_keys(r)[:n],
                                            self._page_tokens(r, n))
 
@@ -742,7 +799,7 @@ class Engine:
         pg = self.ecfg.page_size
         if pos % pg == 0:
             return                      # boundary: a fresh private page
-        moved = self.allocator.ensure_private(rid, pos // pg)
+        moved = self.allocator.ensure_private(rid, pos // pg)  # repro: allow-unpriced-mutation(CoW remap is a device-side page copy with no host traffic; its cost rides the decode batch_time)
         if moved is not None:
             old, new = moved
             self.k_pools = self.k_pools.at[:, new].set(self.k_pools[:, old])
@@ -781,7 +838,7 @@ class Engine:
             logits = None
             while remaining > 0:
                 step_c = min(self.ecfg.chunk, remaining)
-                toks = jnp.asarray([ids[start:start + step_c]], jnp.int32)
+                toks = jnp.asarray([ids[start:start + step_c]], jnp.int32)  # repro: allow-dynamic-shape(legacy plane pre-dates bucketing; distinct lengths are bounded by the chunk ladder and pinned by the compile-count test)
                 logits, self.cache = self._prefill_one(
                     self.params, self.cache, jnp.int32(slot), toks)
                 start += step_c
@@ -823,7 +880,7 @@ class Engine:
                     finishing.append((r, slot))
             tok_ids = step_fn(toks, lens, starts)
             if any(emits[r.rid] for r, _ in finishing):
-                host = np.asarray(tok_ids)          # (nslots,) int32 only
+                host = np.asarray(tok_ids)  # repro: allow-host-sync(per-step sampled-token fetch - ids must reach the host to extend prompts and detect EOS; (nslots,) int32 only)
                 for r, slot in finishing:
                     if emits[r.rid]:
                         final_tok[r.rid] = int(host[slot])
@@ -881,7 +938,7 @@ class Engine:
             self.params, self.k_pools, self.v_pools, jnp.asarray(toks),
             jnp.asarray(ctx), self._block_tables_device(),
             jnp.asarray(active))
-        return np.asarray(tok_ids)
+        return np.asarray(tok_ids)  # repro: allow-host-sync(per-step sampled-token fetch - ids must reach the host to extend prompts and detect EOS; (nslots,) int32 only)
 
     # ------------------------------------------------------------------ #
     def step(self) -> int:
@@ -1034,7 +1091,7 @@ class Engine:
                 tok_ids, self.cache = self._decode_many(
                     self.params, self.cache, jnp.asarray(toks),
                     jnp.asarray(mask))
-                host = np.asarray(tok_ids)          # (nslots,) int32 only
+                host = np.asarray(tok_ids)  # repro: allow-host-sync(per-step sampled-token fetch - ids must reach the host to extend prompts and detect EOS; (nslots,) int32 only)
             for r, c in decode_items:
                 slot = self.slot_of[r.rid]
                 r.advance(c, self.now)
@@ -1078,7 +1135,7 @@ class Engine:
                       if self.allocator.has(r.rid) else 0)
                 assert nt == r.m, (r.rid, nt, r.m)
             return
-        idx = np.asarray(self.cache["index"])
+        idx = np.asarray(self.cache["index"])  # repro: allow-host-sync(check_invariants-gated debug validation; off in benchmark configurations)
         for r, _ in batch.items:
             if r.finished or r.rid not in self.slot_of:
                 continue
@@ -1111,6 +1168,7 @@ class Engine:
         self._drain_swaps()
         if self.ecfg.check_invariants:
             assert not self._pending_swaps
+            assert not self._pending_demotes
             assert len(self.swap_store) == 0, \
                 f"swap store leaked rids {self.swap_store.suspended_rids}"
         sim = SimResult(requests=list(requests), batches=self.batch_logs,

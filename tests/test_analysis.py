@@ -1,0 +1,472 @@
+"""Golden tests for the repo-specific static analysis (PR 6).
+
+Each checker gets fixture snippets with KNOWN true positives and clean
+negatives — if a rule is disabled or its heuristics regress, the
+true-positive assertions fail.  A meta-test pins the committed
+baseline to a fresh full-repo run, and regression fixtures re-create
+the two bugs the gate exists to catch statically: the synchronous
+prefix-page demotion and an unpriced allocator mutation.
+"""
+import json
+import os
+import textwrap
+
+from repro.analysis import charges, hostsync, recompile
+from repro.analysis.astutil import ModuleIndex
+from repro.analysis.findings import (apply_suppressions, load_baseline,
+                                     parse_suppressions)
+from repro.analysis.runner import run_paths
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _index(source, path="src/repro/serving/mod.py"):
+    return ModuleIndex(path, textwrap.dedent(source))
+
+
+def _run(checker, source, path="src/repro/serving/mod.py"):
+    mod = _index(source, path)
+    findings = checker(mod)
+    by_line, bad = parse_suppressions(mod.source_lines, path)
+    return apply_suppressions(findings, by_line) + bad
+
+
+def _blocking(findings, rule=None):
+    return [f for f in findings if f.blocking
+            and (rule is None or f.rule == rule)]
+
+
+# --------------------------------------------------------------------- #
+# checker 1: recompile hazards
+# --------------------------------------------------------------------- #
+
+JITTED_BRANCH_ON_TRACED = """
+    import jax, jax.numpy as jnp
+
+    @jax.jit
+    def f(x):
+        if x > 0:
+            return x + 1
+        return x
+"""
+
+JITTED_HOST_MATERIALIZE = """
+    import jax, numpy as np
+
+    @jax.jit
+    def f(x):
+        v = x.item()
+        a = np.asarray(x)
+        return v, a
+"""
+
+JITTED_FSTRING = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        name = f"val={x}"
+        return x
+"""
+
+JITTED_STATIC_OK = """
+    import jax, jax.numpy as jnp
+
+    @jax.jit
+    def f(x, y=None):
+        if x.shape[0] > 4:
+            x = x[:4]
+        if x.ndim == 2 and len(x) > 1:
+            x = x.sum(0)
+        if y is None:
+            return x
+        return x + y
+"""
+
+UNJITTED_BRANCH_OK = """
+    def g(x):
+        if x > 0:
+            return x + 1
+        return x
+"""
+
+CALLGRAPH_REACH = """
+    import jax
+
+    def helper(x):
+        return x.item()
+
+    @jax.jit
+    def f(x):
+        return helper(x)
+"""
+
+SCAN_CALLBACK_REACH = """
+    import jax
+
+    def body(carry, x):
+        if x > 0:
+            carry = carry + x
+        return carry, x
+
+    def run(xs):
+        import jax.numpy as jnp
+        return jax.lax.scan(body, jnp.zeros(()), xs)
+"""
+
+
+def test_recompile_branch_on_traced_flagged():
+    fs = _blocking(_run(recompile.check_module, JITTED_BRANCH_ON_TRACED),
+                   recompile.RULE)
+    assert len(fs) == 1 and "branch on traced value" in fs[0].message
+
+
+def test_recompile_host_materialization_flagged():
+    fs = _blocking(_run(recompile.check_module, JITTED_HOST_MATERIALIZE),
+                   recompile.RULE)
+    assert len(fs) == 2
+    assert any(".item()" in f.message for f in fs)
+    assert any("np.asarray" in f.message for f in fs)
+
+
+def test_recompile_fstring_interpolation_flagged():
+    fs = _blocking(_run(recompile.check_module, JITTED_FSTRING),
+                   recompile.RULE)
+    assert len(fs) == 1 and "f-string" in fs[0].message
+
+
+def test_recompile_static_branches_clean():
+    assert not _blocking(_run(recompile.check_module, JITTED_STATIC_OK))
+
+
+def test_recompile_outside_jit_clean():
+    assert not _blocking(_run(recompile.check_module, UNJITTED_BRANCH_OK))
+
+
+def test_recompile_reaches_through_call_graph():
+    fs = _blocking(_run(recompile.check_module, CALLGRAPH_REACH),
+                   recompile.RULE)
+    assert len(fs) == 1 and fs[0].symbol == "helper"
+
+
+def test_recompile_reaches_scan_callbacks():
+    fs = _blocking(_run(recompile.check_module, SCAN_CALLBACK_REACH),
+                   recompile.RULE)
+    assert len(fs) == 1 and fs[0].symbol == "body"
+
+
+DYNAMIC_SHAPE = """
+    import jax, jax.numpy as jnp
+
+    def model(params, toks):
+        return toks
+
+    _prefill_many = jax.jit(model)
+
+    def drive(ids, start, n):
+        toks = jnp.asarray(ids[start:start + n])
+        return _prefill_many(None, toks)
+"""
+
+BUCKETED_OK = """
+    import jax, jax.numpy as jnp
+    import numpy as np
+
+    def model(params, toks):
+        return toks
+
+    _prefill_many = jax.jit(model)
+
+    def drive(ids, bucket, nslots):
+        grid = np.zeros((nslots, bucket), np.int32)
+        toks = jnp.asarray(grid)
+        return _prefill_many(None, toks)
+"""
+
+
+def test_dynamic_shape_into_entry_point_flagged():
+    fs = _blocking(_run(recompile.check_module, DYNAMIC_SHAPE),
+                   recompile.RULE_SHAPE)
+    assert len(fs) == 1 and "_prefill_many" in fs[0].message
+
+
+def test_bucketed_staging_clean():
+    assert not _blocking(_run(recompile.check_module, BUCKETED_OK),
+                         recompile.RULE_SHAPE)
+
+
+# --------------------------------------------------------------------- #
+# checker 2: host syncs
+# --------------------------------------------------------------------- #
+
+HOST_SYNC_HOT = """
+    import jax
+    import numpy as np
+    import jax.numpy as jnp
+
+    class Engine:
+        def __init__(self):
+            self.cache = jnp.zeros((4, 4))
+
+        def fetch(self):
+            snap = jax.device_get(self.cache)
+            jax.block_until_ready(self.cache)
+            host = np.asarray(self.cache)
+            return snap, host
+"""
+
+HOST_SYNC_CLEAN = """
+    import numpy as np
+
+    class Engine:
+        def __init__(self):
+            self.meta = [1, 2, 3]
+
+        def fetch(self):
+            return np.asarray(self.meta)
+"""
+
+
+def test_host_sync_flags_all_three_forms():
+    fs = _blocking(_run(hostsync.check_module, HOST_SYNC_HOT),
+                   hostsync.RULE)
+    msgs = " | ".join(f.message for f in fs)
+    assert len(fs) == 3
+    assert "device_get" in msgs and "block_until_ready" in msgs \
+        and "np.asarray" in msgs
+
+
+def test_host_sync_ignores_host_data():
+    assert not _blocking(_run(hostsync.check_module, HOST_SYNC_CLEAN))
+
+
+def test_host_sync_out_of_scope_path_clean():
+    fs = _run(hostsync.check_module, HOST_SYNC_HOT,
+              path="src/repro/launch/tool.py")
+    assert fs == []
+
+
+def test_host_sync_reintroducing_sync_demotion_is_caught():
+    """The satellite-1 regression fixture: a demotion that gathers pool
+    pages through np.asarray (the pre-PR-6 synchronous path) must be a
+    blocking finding in the serving scope."""
+    src = """
+        import numpy as np
+        import jax.numpy as jnp
+
+        class Engine:
+            def __init__(self):
+                self.k_pools = jnp.zeros((2, 8, 4))
+
+            def _demote_prefix(self, key, page):
+                kv = np.asarray(self.k_pools[:, [page]])
+                return kv
+    """
+    fs = _blocking(_run(hostsync.check_module, src,
+                        path="src/repro/serving/engine.py"),
+                   hostsync.RULE)
+    assert len(fs) == 1 and fs[0].symbol == "_demote_prefix"
+
+
+# --------------------------------------------------------------------- #
+# checker 3: charge auditor
+# --------------------------------------------------------------------- #
+
+UNPRICED = """
+    class Engine:
+        def demote(self, key, kv):
+            self.swap_store.put_prefix(key, (), 8, kv)
+"""
+
+PRICED = """
+    class Engine:
+        def demote(self, key, kv):
+            self.swap_store.put_prefix(key, (), 8, kv)
+            self._tier_swap_s += self._swap_time(8)
+            self.swap_stats["demotions"] += 1
+"""
+
+SIBLING_BRANCH_CHARGE = """
+    class Engine:
+        def demote(self, key, kv, fast):
+            if fast:
+                self.swap_store.put_prefix(key, (), 8, kv)
+            else:
+                self._tier_swap_s += self._swap_time(8)
+"""
+
+GUARDED_MUTATION_CHARGED_AFTER = """
+    class Engine:
+        def demote(self, key, kv, ok):
+            if ok:
+                self.swap_store.put_prefix(key, (), 8, kv)
+            self._tier_swap_s += self._swap_time(8)
+"""
+
+
+def test_unpriced_mutation_flagged():
+    fs = _blocking(_run(charges.check_module, UNPRICED), charges.RULE)
+    assert len(fs) == 1 and "put_prefix" in fs[0].message
+
+
+def test_priced_mutation_clean():
+    assert not _blocking(_run(charges.check_module, PRICED))
+
+
+def test_sibling_branch_charge_does_not_pair():
+    fs = _blocking(_run(charges.check_module, SIBLING_BRANCH_CHARGE),
+                   charges.RULE)
+    assert len(fs) == 1
+
+
+def test_dominating_charge_pairs_across_branch():
+    assert not _blocking(_run(charges.check_module,
+                              GUARDED_MUTATION_CHARGED_AFTER))
+
+
+def test_unpriced_out_of_scope_clean():
+    fs = _run(charges.check_module, UNPRICED,
+              path="src/repro/launch/tool.py")
+    assert _blocking(fs, charges.RULE) == []
+
+
+def test_config_mirror_missing_writethrough_flagged(tmp_path):
+    (tmp_path / "core").mkdir()
+    (tmp_path / "serving").mkdir()
+    (tmp_path / "core" / "scheduler.py").write_text(textwrap.dedent("""
+        from dataclasses import dataclass
+
+        @dataclass
+        class SchedulerConfig:
+            M: int = 0
+            page_size: int = 1
+            cache_policy: str = "lru"
+    """))
+    engine_src = textwrap.dedent("""
+        from dataclasses import dataclass
+
+        @dataclass
+        class EngineConfig:
+            nslots: int = 4
+            page_size: int = 1
+            cache_policy: str = "lru"
+
+        class Engine:
+            def __init__(self, scheduler, ecfg):
+                scheduler.cfg.page_size = ecfg.page_size
+    """)
+    path = str(tmp_path / "serving" / "engine.py")
+    mod = ModuleIndex(path, engine_src)
+    fs = [f for f in charges.check_module(mod)
+          if f.rule == charges.RULE_MIRROR]
+    assert len(fs) == 1 and "cache_policy" in fs[0].message
+
+    fixed = engine_src.replace(
+        "scheduler.cfg.page_size = ecfg.page_size",
+        "scheduler.cfg.page_size = ecfg.page_size\n"
+        "        scheduler.cfg.cache_policy = ecfg.cache_policy")
+    mod = ModuleIndex(path, fixed)
+    assert [f for f in charges.check_module(mod)
+            if f.rule == charges.RULE_MIRROR] == []
+
+
+# --------------------------------------------------------------------- #
+# suppressions + baseline
+# --------------------------------------------------------------------- #
+
+def test_suppression_with_rationale_applies():
+    src = """
+        class Engine:
+            def demote(self, key, kv):
+                self.swap_store.put_prefix(key, (), 8, kv)  # repro: allow-unpriced-mutation(fixture rationale)
+    """
+    fs = _run(charges.check_module, src)
+    assert len(fs) == 1 and fs[0].suppressed \
+        and fs[0].reason == "fixture rationale"
+
+
+def test_suppression_comment_above_applies():
+    src = """
+        class Engine:
+            def demote(self, key, kv):
+                # repro: allow-unpriced-mutation(fixture rationale above)
+                self.swap_store.put_prefix(key, (), 8, kv)
+    """
+    fs = _run(charges.check_module, src)
+    assert len(fs) == 1 and fs[0].suppressed
+
+
+def test_suppression_without_rationale_is_a_finding():
+    src = """
+        class Engine:
+            def demote(self, key, kv):
+                self.swap_store.put_prefix(key, (), 8, kv)  # repro: allow-unpriced-mutation
+    """
+    fs = _run(charges.check_module, src)
+    rules = sorted(f.rule for f in fs if f.blocking)
+    assert rules == ["bad-suppression", "unpriced-mutation"]
+
+
+def test_wrong_rule_suppression_does_not_apply():
+    src = """
+        class Engine:
+            def demote(self, key, kv):
+                self.swap_store.put_prefix(key, (), 8, kv)  # repro: allow-host-sync(wrong rule)
+    """
+    fs = _blocking(_run(charges.check_module, src), charges.RULE)
+    assert len(fs) == 1
+
+
+def test_committed_baseline_matches_fresh_run():
+    """`python -m repro.analysis src/` must exit 0 against the committed
+    baseline — and the baseline must not hide findings that no longer
+    exist (stale fingerprints force a regenerate)."""
+    baseline_path = os.path.join(REPO_ROOT, "analysis_baseline.json")
+    committed = set(load_baseline(baseline_path))
+    fresh = run_paths([os.path.join(REPO_ROOT, "src")])
+    fingerprints = {f.fingerprint for f in fresh if not f.suppressed}
+    blocking = {f.fingerprint for f in fresh if f.blocking}
+    # everything blocking is known...
+    assert blocking <= committed, \
+        f"new findings not in baseline: {sorted(blocking - committed)}"
+    # ...and everything known still exists (no stale grandfathering)
+    assert committed <= fingerprints, \
+        f"stale baseline entries: {sorted(committed - fingerprints)}"
+
+
+def test_hlo_host_transfer_and_custom_call_scan():
+    """The artifact audit's HLO text scanners: host-boundary ops and
+    custom_call targets are found; clean modules report nothing."""
+    from repro.launch.hlo_analysis import custom_calls, host_transfer_ops
+    hlo = textwrap.dedent("""
+        ENTRY %main (p0: f32[4]) -> f32[4] {
+          %p0 = f32[4] parameter(0)
+          %t = token[] after-all()
+          %o = token[] outfeed(%p0, %t)
+          %cc = f32[4] custom-call(%p0), custom_call_target="my_pallas_kernel"
+          %s = (f32[4], u32[], token[]) send(%p0, %t), channel_id=1
+          ROOT %r = f32[4] add(%p0, %p0)
+        }
+    """)
+    assert host_transfer_ops(hlo) == {"outfeed": 1, "send": 1}
+    assert custom_calls(hlo) == {"my_pallas_kernel": 1}
+    clean = "ENTRY %m (p0: f32[4]) -> f32[4] {\n  ROOT %r = f32[4] add(%p0, %p0)\n}"
+    assert host_transfer_ops(clean) == {}
+    assert custom_calls(clean) == {}
+
+
+def test_compile_budget_file_checked_in():
+    path = os.path.join(REPO_ROOT, "src", "repro", "analysis",
+                        "compile_budget.json")
+    with open(path) as f:
+        data = json.load(f)
+    assert set(data["num_compiles"]) == {"batched", "paged"}
+    for plane, n in data["num_compiles"].items():
+        assert 0 < n <= 16, (plane, n)   # small constant, per PR 2
+
+
+def test_baseline_file_shape():
+    with open(os.path.join(REPO_ROOT, "analysis_baseline.json")) as f:
+        data = json.load(f)
+    assert sorted(data) == ["fingerprints", "note"]
+    assert data["fingerprints"] == sorted(set(data["fingerprints"]))

@@ -46,14 +46,15 @@ def cost_model():
 
 
 def build_engine(M_kv=256, *, policy="lru", demotion=False, nslots=4,
-                 page_size=8, swap_bytes=None):
+                 page_size=8, swap_bytes=None, async_swap=True):
     cfg, params = model_and_params()
     sched = make_scheduler("vllm", M_kv, S=512, replacement="srf")
     eng = Engine(cfg, params, sched,
                  EngineConfig(nslots=nslots, cache_len=64, chunk=16,
                               plane="paged", page_size=page_size,
                               cache_policy=policy, cache_demotion=demotion,
-                              swap_bytes=swap_bytes),
+                              swap_bytes=swap_bytes,
+                              async_swap=async_swap),
                  cost_model=cost_model())
     return cfg, params, eng
 
@@ -359,6 +360,45 @@ def test_engine_demotion_promotes_back_with_identical_tokens():
     # host tier may legitimately hold demoted prefixes at end of run;
     # suspend bookkeeping must still be clean
     assert len(eng_on.swap_store) == 0
+
+
+def test_async_demotion_parity_with_sync():
+    """The ``async_swap`` demotion path (device-side page gather +
+    ``copy_to_host_async`` + drain-boundary finalize) must be
+    behaviourally identical to the synchronous ``device_get`` path it
+    replaces: same outputs, same demotion/promotion accounting, same
+    virtual-time charges, and byte-identical host-tier snapshots at end
+    of run — only the wall-clock placement of the D2H copy differs."""
+    wl_kw = dict(n=24, num_groups=6, page_size=8, seed=3)
+
+    def run(async_swap):
+        cfg, _, eng = build_engine(policy="break_even", demotion=True,
+                                   async_swap=async_swap)
+        res = eng.run(zipf_shared_prefix(vocab=cfg.vocab_size, **wl_kw))
+        return res, eng
+
+    res_s, eng_s = run(False)
+    res_a, eng_a = run(True)
+    assert res_a.outputs == res_s.outputs
+    for k in ("demotions", "promotions", "kv_demoted", "kv_promoted",
+              "demote_drops"):
+        assert eng_a.swap_stats[k] == eng_s.swap_stats[k], k
+    assert eng_a.swap_stats["demotions"] > 0
+    # identical virtual-time charging => identical makespans
+    assert res_a.metrics.makespan == res_s.metrics.makespan
+    # every in-flight transfer was finalized; surviving host-tier
+    # entries hold host arrays with the same bytes as the sync run
+    assert not eng_a._pending_demotes
+    assert eng_a.swap_store.num_prefix_entries \
+        == eng_s.swap_store.num_prefix_entries
+    for key, ent_a in eng_a.swap_store._prefixes.items():
+        ent_s = eng_s.swap_store._prefixes[key]
+        assert ent_a.tokens == ent_s.tokens
+        assert isinstance(ent_a.kv["k"], np.ndarray), \
+            "async demotion left a device array in the host tier"
+        np.testing.assert_array_equal(ent_a.kv["k"], ent_s.kv["k"])
+        np.testing.assert_array_equal(ent_a.kv["v"], ent_s.kv["v"])
+        assert ent_a.nbytes == ent_s.nbytes
 
 
 def test_engine_demotion_store_full_falls_back():
