@@ -1,4 +1,4 @@
-.PHONY: check test smoke analyze
+.PHONY: check test smoke analyze chaos
 
 # one offline regression command: static analysis + tier-1 tests +
 # smoke benchmarks
@@ -15,3 +15,8 @@ smoke:
 # see src/repro/analysis/README.md
 analyze:
 	PYTHONPATH=src python -m repro.analysis src/
+
+# full fault-injection chaos matrix (step transactions, degradation
+# ladder, engine-vs-sim parity under faults), `slow` sweeps included
+chaos:
+	PYTHONPATH=src python -m pytest -x -q tests/test_chaos.py

@@ -23,7 +23,8 @@ from benchmarks import (appa_low_contention, appb_engine_validation,  # noqa: E4
                         fig09_schedulers, fig11_preemption_free,
                         fig12_vary_m, fig13_csp, fig14_srf,
                         fig_cache_replacement, fig_engine_wall,
-                        fig_prefix_sharing, five_minute_rule, roofline_table)
+                        fig_fault_recovery, fig_prefix_sharing,
+                        five_minute_rule, roofline_table)
 
 # (name, module, smoke-mode kwargs).  Modules without a size knob are
 # already tiny/analytical and run unchanged in smoke mode.
@@ -45,6 +46,8 @@ MODULES = [
      {"smoke": True}),
     ("App C  heterogeneous ranking", appc_ranking, {"W": 96}),
     ("$6     five-minute rule", five_minute_rule, {}),
+    ("$Chaos fault injection & recovery ladder", fig_fault_recovery,
+     {"smoke": True}),
     ("$Roofline table (dry-run artifacts)", roofline_table, {}),
 ]
 

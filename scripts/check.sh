@@ -10,6 +10,9 @@
 #      plus the compiled-artifact audit (HLO scan + compile budget)
 #   3. every figure benchmark at smoke sizes (includes fig_engine_wall
 #      and fig_prefix_sharing); writes experiments/bench/BENCH_smoke.json
+# Set CHECK_CHAOS=1 to additionally run the complete fault-injection
+# chaos matrix (tests/test_chaos.py including its `slow` sweeps); the
+# fast tier already covers the unmarked chaos smoke tests.
 # Extra arguments are forwarded to pytest (e.g. scripts/check.sh -k engine).
 set -e
 cd "$(dirname "$0")/.."
@@ -27,6 +30,12 @@ else
     echo "== tier-1 tests (fast tier; CHECK_FULL=1 for the full suite) =="
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
         -m "not slow" "$@"
+fi
+
+if [ -n "${CHECK_CHAOS:-}" ]; then
+    echo "== chaos suite (full fault-injection matrix) =="
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+        tests/test_chaos.py
 fi
 
 echo "== smoke benchmarks =="

@@ -5,7 +5,7 @@ from __future__ import annotations
 import os
 from typing import Iterable, List, Optional
 
-from repro.analysis import charges, hostsync, recompile
+from repro.analysis import asserts, charges, hostsync, recompile
 from repro.analysis.astutil import ModuleIndex
 from repro.analysis.findings import (Finding, apply_baseline,
                                      apply_suppressions, load_baseline,
@@ -18,11 +18,12 @@ ALL_RULES = (
     recompile.RULE, recompile.RULE_SHAPE,
     hostsync.RULE,
     charges.RULE, charges.RULE_MIRROR,
+    asserts.RULE,
     "bad-suppression",
 )
 
 _CHECKERS = (recompile.check_module, hostsync.check_module,
-             charges.check_module)
+             charges.check_module, asserts.check_module)
 
 
 def iter_py_files(paths: Iterable[str]) -> List[str]:

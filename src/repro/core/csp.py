@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import BatchSpec, CostModel
+from repro.core.invariants import invariant
 
 # per-request key: (I, O, m, g)
 ReqState = Tuple[int, int, int, int]
@@ -90,7 +91,7 @@ def _apply(state: State, actions: Sequence[Action]) -> State:
             c = act[1]
             s = I + g
             m2 = m + c
-            assert m2 <= s, (state, actions)
+            invariant(m2 <= s, (state, actions))
             if m2 == s:                 # token generated
                 g2 = g + 1
                 m2 = 0 if g2 >= O else m2   # completion frees memory

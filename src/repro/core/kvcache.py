@@ -57,6 +57,7 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Set,
                     Tuple)
 
+from repro.core.invariants import invariant
 from repro.core.policies import LRUPolicy, ReplacementPolicy
 
 
@@ -139,8 +140,8 @@ class PrefixCache:
         return [page for page, _, _ in self._map.values()]
 
     def check_invariants(self) -> None:
-        assert set(self._map) == set(self.policy._seq), \
-            "policy metadata out of sync with registry entries"
+        invariant(set(self._map) == set(self.policy._seq),
+                  "policy metadata out of sync with registry entries")
 
     @staticmethod
     def chain_keys(tokens: Sequence[int], page_size: int) -> List[int]:
@@ -159,7 +160,8 @@ class PagedAllocator:
                  on_evict: Optional[
                      Callable[[int, int, Tuple[int, ...], int], None]]
                  = None):
-        assert num_pages > 0 and page_size > 0
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError(f"num_pages={num_pages}, page_size={page_size}")
         self.num_pages = num_pages
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
@@ -179,6 +181,10 @@ class PagedAllocator:
         # its device-side block-table upload across decode steps and
         # invalidate it without tracking call sites by hand
         self.version = 0
+        # fault-injection hook: called as fault_hook(need) before pages
+        # are taken — a seeded FaultPlan raises a transient FaultError
+        # here to model device allocation failures (serving.faults)
+        self.fault_hook: Optional[Callable[[int], None]] = None
         self.stats: Dict[str, int] = dict(
             prefix_hits=0, prefix_shared_tokens=0, cow_copies=0,
             reclaimed=0, reclaim_skipped=0)
@@ -222,7 +228,7 @@ class PagedAllocator:
     # --- refcount plumbing --------------------------------------------- #
     def _decref(self, page: int) -> None:
         self._refs[page] -= 1
-        assert self._refs[page] >= 0, page
+        invariant(self._refs[page] >= 0, page)
         if self._refs[page] == 0:
             del self._refs[page]
             self._free.append(page)
@@ -240,6 +246,8 @@ class PagedAllocator:
         pages).  Each genuinely evicted entry is offered to ``on_evict``
         (host demotion) before its page returns to the free list, and
         only those count as ``reclaimed``."""
+        if self.fault_hook is not None and need > 0:
+            self.fault_hook(need)
         if len(self._free) < need and len(self.prefix_cache):
             for key in self.prefix_cache.eviction_order(self.now):
                 if len(self._free) >= need:
@@ -261,7 +269,7 @@ class PagedAllocator:
                 f"none evictable)")
         granted = [self._free.pop() for _ in range(need)]
         for p in granted:
-            assert p not in self._refs, p
+            invariant(p not in self._refs, p)
             self._refs[p] = 1
         return granted
 
@@ -287,11 +295,11 @@ class PagedAllocator:
         """Map existing (registry-held) pages as the PREFIX of rid's
         table — shared-prefix reuse.  Only full pages are shareable and
         the table must be empty (prefix attach happens at first claim)."""
-        assert rid not in self._tables, rid
-        assert num_tokens == len(pages) * self.page_size, \
-            (num_tokens, len(pages), self.page_size)
+        invariant(rid not in self._tables, rid)
+        invariant(num_tokens == len(pages) * self.page_size,
+                  (num_tokens, len(pages), self.page_size))
         for p in pages:
-            assert self._refs.get(p, 0) > 0, f"page {p} is not live"
+            invariant(self._refs.get(p, 0) > 0, f"page {p} is not live")
             self._refs[p] += 1
         self.version += 1
         self._tables[rid] = BlockTable(list(pages), num_tokens)
@@ -303,10 +311,10 @@ class PagedAllocator:
         table — the host-promotion path of a prefix attach extends the
         run page by page.  The table must be whole full pages so far."""
         tbl = self._tables[rid]
-        assert num_tokens == self.page_size, num_tokens
-        assert tbl.num_tokens == len(tbl.pages) * self.page_size, \
-            (rid, tbl.num_tokens, len(tbl.pages))
-        assert self._refs.get(page, 0) > 0, f"page {page} is not live"
+        invariant(num_tokens == self.page_size, num_tokens)
+        invariant(tbl.num_tokens == len(tbl.pages) * self.page_size,
+                  (rid, tbl.num_tokens, len(tbl.pages)))
+        invariant(self._refs.get(page, 0) > 0, f"page {page} is not live")
         self._refs[page] += 1
         self.version += 1
         tbl.pages.append(page)
@@ -347,7 +355,8 @@ class PagedAllocator:
         (page-level partial preemption).  Returns the tokens removed;
         the kept pages are full, so the new boundary is page-aligned."""
         tbl = self._tables[rid]
-        assert 0 < npages <= len(tbl.pages), (rid, npages, len(tbl.pages))
+        invariant(0 < npages <= len(tbl.pages),
+                  (rid, npages, len(tbl.pages)))
         self.version += 1
         removed = tbl.pages[-npages:]
         del tbl.pages[-npages:]
@@ -420,21 +429,22 @@ class PagedAllocator:
     def check_invariants(self) -> None:
         held = sorted(self._refs)
         all_pages = held + self._free
-        assert len(all_pages) == self.num_pages, "page leak"
-        assert len(set(all_pages)) == self.num_pages, "double allocation"
+        invariant(len(all_pages) == self.num_pages, "page leak")
+        invariant(len(set(all_pages)) == self.num_pages,
+                  "double allocation")
         # refcount == table memberships + registry pin, everywhere
         counts: Dict[int, int] = {}
         for rid, t in self._tables.items():
-            assert t.pages, f"rid {rid}: empty block table"
+            invariant(t.pages, f"rid {rid}: empty block table")
             cap = len(t.pages) * self.page_size
-            assert 0 < t.num_tokens <= cap, (rid, t.num_tokens, cap)
+            invariant(0 < t.num_tokens <= cap, (rid, t.num_tokens, cap))
             for p in t.pages:
                 counts[p] = counts.get(p, 0) + 1
         for p in self._pinned:
             counts[p] = counts.get(p, 0) + 1
-        assert counts == self._refs, (counts, self._refs)
-        assert self._pinned == set(self.prefix_cache.pages), \
-            (self._pinned, self.prefix_cache.pages)
+        invariant(counts == self._refs, (counts, self._refs))
+        invariant(self._pinned == set(self.prefix_cache.pages),
+                  (self._pinned, self.prefix_cache.pages))
         self.prefix_cache.check_invariants()
 
 
@@ -447,7 +457,8 @@ def attach_prefix_run(alloc: PagedAllocator, rid: int,
                       keys: Sequence[int],
                       page_tokens: Sequence[Sequence[int]],
                       host_tier: Any = None,
-                      restore: Optional[Callable[[int, Any], None]] = None
+                      restore: Optional[Callable[[int, Any], None]] = None,
+                      verify: Optional[Callable[[Any], bool]] = None
                       ) -> Tuple[int, int]:
     """Map the longest consecutive run of cached prefix pages starting
     at page 0 into rid's (empty) block table, resolving each chain key
@@ -458,6 +469,13 @@ def attach_prefix_run(alloc: PagedAllocator, rid: int,
     entry.kv)``.  Every attached page is mapped into the table (and so
     refcount-protected) before the next key is resolved — a promotion's
     own reclaim can never evict pages of the run being built.
+
+    ``verify(entry)`` — when given — gates every host promotion: a
+    False verdict (CRC mismatch, injected promote fault) DROPS the
+    demoted entry and ends the run there, so a rotten host snapshot
+    degrades to a registry miss (recompute) instead of restoring wrong
+    KV.  The engine passes ``swap_store.verify_entry`` composed with
+    its fault plan; the simulator mirrors the same plan draws.
 
     Returns ``(attached_tokens, promoted_tokens)``; the caller charges
     ``swap_time(promoted_tokens)`` — the Fig. 8 host-link price of the
@@ -478,6 +496,12 @@ def attach_prefix_run(alloc: PagedAllocator, rid: int,
             # re-insert the key — a collision must degrade to a miss,
             # never an error (and never another prompt's KV)
             entry = host_tier.peek_prefix(key, toks)
+            if entry is not None and verify is not None \
+                    and not verify(entry):
+                # integrity failure: drop the rotten snapshot and stop
+                # the run — the pages it would have covered recompute
+                host_tier.discard_prefix(key)  # repro: allow-unpriced-mutation(dropping a corrupt entry moves no bytes; the caller counts it in its integrity stats)
+                break
             if entry is not None:
                 try:
                     # repro: allow-unpriced-mutation(priced by the caller - promoted tokens are returned and charged swap_time into the batch, parity-tested engine vs simulator)

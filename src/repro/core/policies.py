@@ -167,7 +167,9 @@ class BreakEvenPolicy(ReplacementPolicy):
     def __init__(self, cost_model, M: int, *,
                  mode: str = "kv_projection") -> None:
         super().__init__()
-        assert cost_model is not None and M > 0, (cost_model, M)
+        if cost_model is None or M <= 0:
+            raise ValueError(f"break_even needs a cost model and M > 0, "
+                             f"got {(cost_model, M)}")
         self.cost_model = cost_model
         self.M = M
         self.mode = mode

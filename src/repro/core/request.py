@@ -13,6 +13,8 @@ import enum
 from dataclasses import dataclass, field
 from typing import List, Optional
 
+from repro.core.invariants import invariant
+
 
 class Phase(enum.Enum):
     WAITING = "waiting"
@@ -113,8 +115,8 @@ class Request:
     # ------------------------------------------------------------------ #
     def advance(self, c: int, now: float) -> bool:
         """Process c tokens; returns True if a token was generated."""
-        assert self.running and c >= 1, (self.rid, self.running, c)
-        assert self.m + c <= self.target_context, "over-processing"
+        invariant(self.running and c >= 1, (self.rid, self.running, c))
+        invariant(self.m + c <= self.target_context, "over-processing")
         self.m += c
         if self.m == self.target_context:
             # prefill completed, or decode step -> one new token
@@ -143,7 +145,8 @@ class Request:
         device + tail tokens); a recompute-mode one discards everything
         (the driver must drop the stored runs).
         """
-        assert mode in ("recompute", "swap"), mode
+        if mode not in ("recompute", "swap"):
+            raise ValueError(f"preempt mode={mode!r}")
         released = self.m
         if mode == "swap" and self.m + self.tail_suspended_m > 0:
             self.suspended = True
@@ -167,9 +170,10 @@ class Request:
         ``mode="swap"`` sends the run to host memory (restored before the
         next compute step); ``mode="recompute"`` re-prefills the tokens
         later.  Returns the tokens shed."""
-        assert mode in ("recompute", "swap"), mode
-        assert self.running and 0 < n_tokens <= self.m, \
-            (self.rid, self.running, n_tokens, self.m)
+        if mode not in ("recompute", "swap"):
+            raise ValueError(f"partial_preempt mode={mode!r}")
+        invariant(self.running and 0 < n_tokens <= self.m,
+                  (self.rid, self.running, n_tokens, self.m))
         self.m -= n_tokens
         self.partial_preemptions += 1
         if mode == "swap":
@@ -180,7 +184,7 @@ class Request:
     def resume_tail(self) -> int:
         """Tail swap-in: the driver restored the suspended tail pages.
         Returns the number of restored tokens."""
-        assert self.tail_suspended_m > 0, self.rid
+        invariant(self.tail_suspended_m > 0, self.rid)
         restored = self.tail_suspended_m
         self.m += restored
         self.tail_suspended_m = 0
@@ -189,8 +193,8 @@ class Request:
     def drop_tail_run(self, n_tokens: int) -> None:
         """The driver could not keep a tail run (host store full): those
         tokens fall back to recompute via ``remaining_prefill``."""
-        assert 0 < n_tokens <= self.tail_suspended_m, \
-            (self.rid, n_tokens, self.tail_suspended_m)
+        invariant(0 < n_tokens <= self.tail_suspended_m,
+                  (self.rid, n_tokens, self.tail_suspended_m))
         self.tail_suspended_m -= n_tokens
         self.swaps -= 1
 
@@ -198,7 +202,7 @@ class Request:
         """The driver could not keep the snapshot (host store full): this
         preemption falls back to discard-and-recompute — the request pays
         the full §3 refill on re-admission after all."""
-        assert self.suspended, self.rid
+        invariant(self.suspended, self.rid)
         self.suspended = False
         self.suspended_m = 0
         self.swaps -= 1
@@ -206,7 +210,7 @@ class Request:
     def resume(self) -> int:
         """Swap-in: the driver restored ``suspended_m`` KVs to the device.
         Returns the number of restored tokens."""
-        assert self.suspended, self.rid
+        invariant(self.suspended, self.rid)
         restored = self.suspended_m
         self.m = restored
         self.suspended = False

@@ -17,12 +17,14 @@ both drive it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Any, Dict, List, Optional, Sequence,
+                    Tuple)
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.cost_model import CostModel
 
 from repro.core.histogram import OutputLengthHistogram
+from repro.core.invariants import invariant
 from repro.core.policies import group_requests, ranking_key, select_victim
 from repro.core.request import Phase, Request
 
@@ -77,6 +79,12 @@ class SchedulerConfig:
     # host-resident prefix promotes it back through the swap path,
     # charged ``cost_model.swap_time`` (virtual AND wall time).
     cache_demotion: bool = False
+    # Deterministic fault injection (a ``serving.faults.FaultSpec``;
+    # typed Any to keep core/ import-free of serving/).  Declared here
+    # like page_size so the engine AND the simulator build their fault
+    # plans from one source and observe the same fault schedule —
+    # that is what keeps parity byte-exact under injected faults.
+    faults: Optional[Any] = None
 
 
 @dataclass
@@ -110,8 +118,8 @@ class Scheduler:
 
     def __init__(self, cfg: SchedulerConfig,
                  cost_model: Optional["CostModel"] = None):
-        assert cfg.preempt_mode in ("recompute", "swap", "auto"), \
-            cfg.preempt_mode
+        if cfg.preempt_mode not in ("recompute", "swap", "auto"):
+            raise ValueError(f"preempt_mode={cfg.preempt_mode!r}")
         self.cfg = cfg
         # prices the swap-vs-recompute decision for preempt_mode="auto";
         # drivers (simulator / engine) inject theirs if unset
@@ -289,7 +297,7 @@ class Scheduler:
     def _hist_defer(self, cand: Request) -> bool:
         """SRF+Hist: defer admission if the predicted peak demand of
         running + cand would exceed M (avoids future preemptions)."""
-        assert self.histogram is not None
+        invariant(self.histogram is not None)
         pred_o = self.histogram.predict(cand.input_len)
         cand.predicted_output = pred_o
         # the candidate's demand is capped at S exactly like every running

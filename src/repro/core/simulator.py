@@ -13,6 +13,21 @@ host-tier bookkeeping (metadata-only — no bytes move) at the same points
 of the batch loop, so demotion/promotion counts and their ``swap_time``
 charges match the serving engine batch-for-batch on identical schedules
 (the demotion/promotion parity test pins this).
+
+Fault parity — when ``SchedulerConfig.faults`` carries a
+``serving.faults.FaultSpec``, the simulator mirrors the engine's
+failure model without moving a byte: a ``_FaultMirror`` tracks which
+host snapshots each suspended request would hold and draws the SAME
+content-keyed verdicts from its own ``FaultPlan`` at the same decision
+points.  Permanent store failures apply the engine's exact fallback
+arithmetic (drop + recompute, no charge); a "corrupt" snapshot aborts
+the iteration through a real step transaction (``serving.txn``) —
+rollback, repair, retry — exactly as ``Engine.step`` does, so schedules
+stay batch-for-batch identical under any fault schedule.  Transient
+faults and their backoff are recorded but invisible to virtual time,
+and attempt-keyed allocation faults are engine-internal by design (an
+aborted attempt leaves no parity-visible state).  Results land in
+``SimResult.recovery_stats``.
 """
 from __future__ import annotations
 
@@ -56,6 +71,10 @@ class SimResult:
     # prefix-cache tier counters when a PrefixTierSim shadow ran
     # (promotions/demotions/charges + the shadow allocator's stats)
     prefix_stats: Dict[str, float] = field(default_factory=dict)
+    # fault-mirror counters when SchedulerConfig.faults was set
+    # (rollbacks, integrity failures, degraded recomputes, permanent
+    # store failures, transient retries/backoff, swap fallbacks)
+    recovery_stats: Dict[str, float] = field(default_factory=dict)
 
     # --- aggregate metrics (§5.1) -------------------------------------- #
     @property
@@ -131,6 +150,111 @@ def _spec_of(batch: Batch) -> BatchSpec:
     return spec
 
 
+class _FaultMirror:
+    """Metadata shadow of the engine's fault handling on the suspend
+    path.  Tracks, per suspended rid, the page runs the engine's swap
+    store would hold — ``(num_tokens, corrupt)`` pairs, a full-slot
+    snapshot being a single "run" — and draws the same content-keyed
+    verdicts the engine draws (``serving.faults``), so the simulator
+    degrades exactly the requests the engine degrades.  The backoff
+    mirror assumes ``run_with_retries``'s default ``backoff_s=0.1``,
+    which is what the engine's guarded puts use."""
+
+    def __init__(self, plan):
+        self.plan = plan
+        self.runs: Dict[int, List[Tuple[int, bool]]] = {}
+        self.stats: Dict[str, float] = dict(
+            rollbacks=0, integrity_failures=0, degraded_recomputes=0,
+            permanent_store_failures=0, transient_retries=0,
+            backoff_s=0.0, swap_fallbacks=0)
+
+    def snapshot(self):
+        runs = {rid: list(rs) for rid, rs in self.runs.items()}
+        stats = dict(self.stats)
+
+        def restore() -> None:
+            self.runs = {rid: list(rs) for rid, rs in runs.items()}
+            self.stats = dict(stats)
+        return restore
+
+    def _transients(self, kind: str, fkey: Tuple) -> None:
+        k = self.plan.transient_failures(kind, *fkey)
+        if k:
+            self.stats["transient_retries"] += k
+            self.stats["backoff_s"] += sum(0.1 * 2 ** i for i in range(k))
+
+    def suspend(self, v: Request, sched: Scheduler) -> bool:
+        """Mirror the full-suspend put (engine ``_swap_out`` /
+        ``_swap_out_paged``); False = permanent failure, with the
+        engine's fallback arithmetic applied (drop every stored run,
+        degrade to recompute, no charge)."""
+        fkey = (v.rid, v.suspended_m, v.swaps)
+        if self.plan.decide("perm_put", *fkey):
+            self.stats["permanent_store_failures"] += 1
+            for _ in self.runs.pop(v.rid, []):
+                v.swaps -= 1
+                sched.num_swaps -= 1
+                self.stats["swap_fallbacks"] += 1
+            v.drop_suspended()
+            sched.num_swaps -= 1
+            self.stats["swap_fallbacks"] += 1
+            return False
+        self._transients("store_put", fkey)
+        corrupt = self.plan.decide("corrupt_put", *fkey)
+        self.runs.setdefault(v.rid, []).append((v.suspended_m, corrupt))
+        return True
+
+    def shed(self, r: Request, n_tokens: int, sched: Scheduler) -> bool:
+        """Mirror one tail-shed put (engine ``_shed_tail``); False =
+        permanent failure — the failed run AND every stored run fold
+        back to recompute (the tiling has a gap)."""
+        fkey = (r.rid, r.m, n_tokens, r.partial_preemptions)
+        if self.plan.decide("perm_run", *fkey):
+            self.stats["permanent_store_failures"] += 1
+            r.drop_tail_run(n_tokens)
+            sched.num_swaps -= 1
+            self.stats["swap_fallbacks"] += 1
+            for n, _ in self.runs.pop(r.rid, []):
+                r.drop_tail_run(n)
+                sched.num_swaps -= 1
+                self.stats["swap_fallbacks"] += 1
+            return False
+        self._transients("store_run", fkey)
+        corrupt = self.plan.decide("corrupt_run", *fkey)
+        self.runs.setdefault(r.rid, []).append((n_tokens, corrupt))
+        return True
+
+    def corrupt_restore(self, batch_items) -> Optional[Request]:
+        """First request in batch order whose stored snapshot is
+        corrupt — the engine verifies swap-ins in batch order and
+        aborts on the FIRST integrity failure."""
+        for r, _ in batch_items:
+            if (r.suspended or r.tail_suspended_m > 0) and \
+                    any(c for _, c in self.runs.get(r.rid, [])):
+                return r
+        return None
+
+    def repair(self, r: Request, sched: Scheduler) -> None:
+        """Post-rollback repair, the engine's ``_drop_snapshot_repair``
+        / ``_drop_runs_repair`` arithmetic: drop every stored run and
+        degrade ``r`` to recompute."""
+        runs = self.runs.pop(r.rid, [])
+        if r.suspended:                   # full suspend (claim=True)
+            for _ in runs[:-1]:           # tail runs beyond the base
+                r.swaps -= 1
+                sched.num_swaps -= 1
+            r.drop_suspended()
+            sched.num_swaps -= 1
+        else:                             # tail restore (claim=False)
+            for n, _ in runs:
+                r.drop_tail_run(n)
+                sched.num_swaps -= 1
+
+    def restored(self, r: Request) -> None:
+        """A successful swap-in empties the store for this rid."""
+        self.runs.pop(r.rid, None)
+
+
 class PrefixTierSim:
     """Virtual-time shadow of the paged engine's two-tier prefix cache.
 
@@ -155,7 +279,8 @@ class PrefixTierSim:
                  page_nbytes: int, host_bytes: Optional[int] = None):
         from repro.serving.swap_store import KVSwapStore
         pg = scfg.page_size
-        assert pg > 1, "prefix-tier shadow needs page_size > 1"
+        if pg <= 1:
+            raise ValueError("prefix-tier shadow needs page_size > 1")
         self.pg = pg
         self.cm = cost_model
         self.demotion = bool(scfg.cache_demotion)
@@ -167,16 +292,49 @@ class PrefixTierSim:
                                            cost_model=cost_model,
                                            M=scfg.M),
             on_evict=self._demote if self.demotion else None)
+        # own fault plan from the shared spec: same seed, same draws as
+        # the engine's (serving.faults content-keying) — never the
+        # engine's plan object, parity must not need shared state
+        self.plan = None
+        if getattr(scfg, "faults", None) is not None:
+            from repro.serving.faults import FaultPlan
+            self.plan = FaultPlan(scfg.faults)
         self.pending_s = 0.0      # tier charges owed to the current batch
         self.stats: Dict[str, float] = dict(
             promotions=0, demotions=0, demote_drops=0,
-            kv_promoted=0, kv_demoted=0, tier_swap_s=0.0)
+            kv_promoted=0, kv_demoted=0, tier_swap_s=0.0,
+            prefix_integrity=0)
         self._keys: Dict[int, List[int]] = {}
         self._ptoks: Dict[int, List[Tuple[int, ...]]] = {}
+
+    def snapshot(self):
+        """Restore closure over the shadow's whole state (allocator,
+        registry, host tier, counters) — the fault mirror's step
+        transaction adds it so aborted iterations roll the shadow back
+        in lockstep with the scheduler."""
+        from repro.serving.txn import snapshot_allocator, snapshot_store
+        restore_alloc = snapshot_allocator(self.alloc)
+        restore_store = snapshot_store(self.store)
+        stats = dict(self.stats)
+        pending = self.pending_s
+        keys, ptoks = dict(self._keys), dict(self._ptoks)
+
+        def restore() -> None:
+            restore_alloc()
+            restore_store()
+            self.stats = dict(stats)
+            self.pending_s = pending
+            self._keys, self._ptoks = dict(keys), dict(ptoks)
+        return restore
 
     def _demote(self, key: int, page: int, tokens, n_kvs: int) -> None:
         from repro.serving.swap_store import SwapStoreFullError
         if self.store.has_prefix(key):
+            return
+        if self.plan is not None and self.plan.decide("demote_fail", key):
+            # mirror of the engine's dropped demotion: no entry, no
+            # charge — the page recomputes on its next miss
+            self.stats["demote_drops"] += 1
             return
         try:
             self.store.put_prefix(key, tokens, n_kvs, None,
@@ -188,11 +346,25 @@ class PrefixTierSim:
         self.stats["demotions"] += 1
         self.stats["kv_demoted"] += self.pg
 
+    def _verify(self, entry) -> bool:
+        """Mirror of the engine's ``_verify_prefix`` promotion gate:
+        same fault-plan draws on the same entry key (the shadow's
+        entries are metadata-only, so the CRC side is trivially
+        clean — rot is modeled by the ``corrupt_prefix`` flag on both
+        sides, never by bytes)."""
+        bad = self.plan is not None and (
+            self.plan.decide("corrupt_prefix", entry.key)
+            or self.plan.decide("promote_fail", entry.key))
+        if bad:
+            self.stats["prefix_integrity"] += 1
+        return not bad
+
     def _chain(self, r: Request):
         keys = self._keys.get(r.rid)
         if keys is None:
-            assert r.prompt is not None, \
-                f"prefix-tier shadow needs real prompts (rid {r.rid})"
+            if r.prompt is None:
+                raise ValueError(
+                    f"prefix-tier shadow needs real prompts (rid {r.rid})")
             keys = PrefixCache.chain_keys(r.prompt, self.pg)
             self._keys[r.rid] = keys
             self._ptoks[r.rid] = [
@@ -240,7 +412,8 @@ class PrefixTierSim:
         keys, ptoks = self._chain(r)
         attached, promoted = attach_prefix_run(
             self.alloc, r.rid, keys[:cap], ptoks[:cap],
-            host_tier=self.store if self.demotion else None, restore=None)
+            host_tier=self.store if self.demotion else None, restore=None,
+            verify=self._verify if self.demotion else None)
         if promoted:
             self.pending_s += self.cm.swap_time(promoted)
             self.stats["promotions"] += promoted // self.pg
@@ -283,6 +456,12 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
     """
     if scheduler.cost_model is None:
         scheduler.cost_model = cost_model   # auto preempt-mode pricing
+    # fault mirror: built from the config's spec exactly like the
+    # engine's plan, so both sides draw one deterministic schedule
+    mirror: Optional[_FaultMirror] = None
+    if getattr(scheduler.cfg, "faults", None) is not None:
+        from repro.serving.faults import FaultPlan
+        mirror = _FaultMirror(FaultPlan(scheduler.cfg.faults))
     pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
     now = 0.0
     result = SimResult(requests=list(requests))
@@ -302,26 +481,53 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
             now = pending[i].arrival          # idle: jump to next arrival
             continue
 
+        # step transaction (faulty runs only): snapshot AFTER admission
+        # so an integrity abort rolls back to exactly this point and the
+        # retried iteration re-plans from repaired state — the engine's
+        # Engine.step attempt loop, in virtual time
+        txn = saved = None
+        if mirror is not None:
+            from repro.serving.txn import begin_step_txn
+            txn = begin_step_txn(
+                scheduler=scheduler,
+                requests=scheduler.waiting + scheduler.running)
+            txn.add(mirror.snapshot())
+            if prefix_sim is not None:
+                txn.add(prefix_sim.snapshot())
+            saved = (now, carry_swap_s, carry_out, carry_preempted)
+
         if prefix_sim is not None:
             prefix_sim.begin(now)       # replacement-policy clock
         batch = scheduler.get_next_batch()
         if prefix_sim is not None:
             prefix_sim.preempts(batch)
+        # page-level partial preemptions FIRST (engine order: tail runs
+        # are snapshotted before any full suspend of the same victim):
+        # swap-mode runs are charged per run (the Fig. 8 crossover
+        # already priced them per run); only a RUNNING victim's shed
+        # actually stores a run — a folded shed (victim also fully
+        # preempted this round) charges but moves no data, so it draws
+        # no fault verdicts
+        for r, _, n_tokens, mode in batch.partial_preempted:
+            if mode != "swap":
+                continue
+            if mirror is not None and r.running \
+                    and not mirror.shed(r, n_tokens, scheduler):
+                continue            # permanent failure: recompute
+            carry_swap_s += cost_model.swap_time(n_tokens)
+            carry_out += 1
         # host-link swap-out charges accrue even when the batch admits
         # nothing (the victim's transfer happens regardless); they are
-        # carried into the next executed batch's virtual time
-        out_now = [v for v in batch.preempted if v.suspended]
+        # carried into the next executed batch's virtual time.
         # swap_out_m: only the device-resident portion crosses the link
         # now (tail runs shed earlier were charged when they left)
-        carry_swap_s += sum(cost_model.swap_time(v.swap_out_m)
-                            for v in out_now)
-        carry_out += len(out_now)
-        # page-level partial preemptions: swap-mode tail runs are charged
-        # per run (the Fig. 8 crossover already priced them per run)
-        for _, _, n_tokens, mode in batch.partial_preempted:
-            if mode == "swap":
-                carry_swap_s += cost_model.swap_time(n_tokens)
-                carry_out += 1
+        for v in batch.preempted:
+            if not v.suspended:
+                continue
+            if mirror is not None and not mirror.suspend(v, scheduler):
+                continue            # permanent failure: recompute
+            carry_swap_s += cost_model.swap_time(v.swap_out_m)
+            carry_out += 1
         carry_preempted += len(batch.preempted) + len(batch.partial_preempted)
         if not batch.items:
             if i < len(pending):              # blocked: wait for arrivals
@@ -343,6 +549,19 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
             pf_items = [(r, c) for r, c in batch.items
                         if not (r.generated > 0
                                 and r.remaining_prefill == c == 1)]
+        # integrity gate BEFORE the restores: the engine verifies every
+        # snapshot at swap-in and aborts the attempt on the first
+        # corrupt one — mirror that as rollback + repair + retry
+        if mirror is not None:
+            bad = mirror.corrupt_restore(batch.items)
+            if bad is not None:
+                txn.rollback()
+                now, carry_swap_s, carry_out, carry_preempted = saved
+                mirror.stats["rollbacks"] += 1
+                mirror.stats["integrity_failures"] += 1
+                mirror.stats["degraded_recomputes"] += 1
+                mirror.repair(bad, scheduler)   # on rolled-back state
+                continue
         # swap-in charges for suspended requests re-admitted here, and
         # tail-run restores for partially-shed requests batched again
         swapped_in = [r for r, _ in batch.items if r.suspended]
@@ -356,8 +575,12 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
         carry_swap_s, carry_out, carry_preempted = 0.0, 0, 0
         for r in swapped_in:
             r.resume()
+            if mirror is not None:
+                mirror.restored(r)
         for r in tail_in:
             r.resume_tail()
+            if mirror is not None:
+                mirror.restored(r)
         if prefix_sim is not None:
             # claim-time control plane AFTER restore (r.m is then the
             # restored context, as the engine sees it) and BEFORE dt —
@@ -394,6 +617,8 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
     result.num_swaps = scheduler.num_swaps
     if prefix_sim is not None:
         result.prefix_stats = prefix_sim.result_stats()
+    if mirror is not None:
+        result.recovery_stats = dict(mirror.stats)
     return result
 
 

@@ -26,18 +26,27 @@ log = logging.getLogger("repro.ft")
 
 def run_with_retries(fn: Callable, *args, retries: int = 3,
                      backoff_s: float = 0.1,
-                     retry_on: Tuple = (RuntimeError,), **kw):
+                     retry_on: Tuple = (RuntimeError,),
+                     sleep: Optional[Callable[[float], None]] = None, **kw):
     """Re-execute ``fn`` on transient runtime errors (jittable steps are
-    deterministic, so re-execution is safe)."""
+    deterministic, so re-execution is safe).
+
+    ``sleep`` is the backoff clock — defaults to ``time.sleep``; the
+    serving engine injects a virtual clock that *records* the schedule
+    (exponential: ``backoff_s * 2**attempt``) instead of stalling the
+    step, which also makes the retry path unit-testable.
+    """
+    if sleep is None:
+        sleep = time.sleep
     for attempt in range(retries + 1):
         try:
             return fn(*args, **kw)
-        except retry_on as e:  # pragma: no cover - exercised via injection
+        except retry_on as e:
             if attempt == retries:
                 raise
             log.warning("step failed (%s); retry %d/%d", e, attempt + 1,
                         retries)
-            time.sleep(backoff_s * (2 ** attempt))
+            sleep(backoff_s * (2 ** attempt))
 
 
 def largest_pow2_leq(n: int) -> int:

@@ -112,6 +112,45 @@ changes the inner scans' chunk factorization, so states agree to float
 reduction-order noise (~1e-7 relative) — the same order as the
 chunked-vs-full divergence the parity oracle already tolerates, below
 anything that flips a greedy argmax in practice.
+
+Failure model (DBMS-style step transactions) — every scheduler batch
+runs as an atomic STEP TRANSACTION (``serving.txn``): allocator,
+swap store, scheduler, request state machines, and the engine-local
+slot/output maps are snapshotted at batch start and rolled back as one
+unit on a mid-step failure.  Failures are injected deterministically by
+a seeded ``serving.faults.FaultPlan`` (``EngineConfig.faults``, written
+through to the SchedulerConfig so the simulator draws the identical
+schedule) and handled along a three-rung degradation ladder:
+
+1. **retry in place** — transient swap-store write failures are retried
+   with bounded exponential backoff (``distributed.fault_tolerance.
+   run_with_retries`` with an injectable virtual-sleep clock; the
+   schedule lands in ``swap_stats["backoff_s"]``, never on the wall).
+2. **rollback + retry the step** — a transient device fault at page
+   allocation (``FaultError``) aborts the attempt; the step transaction
+   restores batch-start state and the step re-runs (allocation faults
+   are keyed by attempt, so the retry draws fresh).  A real
+   ``OutOfPagesError`` rolls back too — invariants stay green — but
+   re-raises: it signals an accounting bug, not a survivable fault.
+3. **degrade to recompute** — host snapshots are CRC-sealed at drain
+   time (``swap_store.seal_entry``) and verified at swap-in / promote;
+   a corrupt entry (``IntegrityError``) triggers rollback, the entry is
+   dropped, its request degrades to a §3-style recompute, and the step
+   retries.  Wrong tokens are never served: chaos tests assert outputs
+   under any fault schedule are byte-identical to the fault-free run.
+   Permanent store failures (``PermanentStoreError``, a
+   ``SwapStoreFullError`` subclass) ride the existing full-store
+   fallback: drop the snapshot, recompute.
+
+Abort history is recorded in ``Engine.recovery_stats`` (rollbacks,
+alloc faults, integrity failures, degraded recomputes, straggler
+requeues, aborted wall time) — deliberately OUTSIDE the transaction, so
+rolling back never erases the record of the rollback itself.  In-step
+fault counters (retries, backoff, permanent failures, prefix integrity)
+live in ``swap_stats`` INSIDE the transaction, so an aborted attempt's
+draws are not double-counted by its retry.  ``StragglerMonitor``
+(``EngineConfig.straggler_factor``) optionally requeues all running
+requests when a step's wall time blows past the cost-model prediction.
 """
 from __future__ import annotations
 
@@ -127,17 +166,30 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import BatchSpec, CostModel
-from repro.core.kvcache import (PagedAllocator, PrefixCache,
-                                attach_prefix_run)
+from repro.core.invariants import invariant
+from repro.core.kvcache import (OutOfPagesError, PagedAllocator,
+                                PrefixCache, attach_prefix_run)
 from repro.core.policies import make_replacement_policy
 from repro.core.request import Request
 from repro.core.scheduler import Scheduler
 from repro.core.simulator import BatchLog, SimResult
+from repro.distributed.fault_tolerance import (StragglerMonitor,
+                                               run_with_retries)
 from repro.models import model as M
+from repro.serving.faults import (FaultError, FaultPlan, IntegrityError,
+                                  PermanentStoreError, TransientStoreError)
 from repro.serving.paged_plane import build_paged_fns, paged_supported
 from repro.serving.serve_step import build_prefill_chunk_fn
 from repro.serving.swap_store import (KVSwapStore, SwapEntry,
-                                      SwapStoreFullError)
+                                      SwapStoreFullError, flip_bit,
+                                      seal_entry, verify_entry)
+from repro.serving.txn import StepTxn, begin_step_txn
+
+# hard ceiling on fault-recovery retries of one step: content-keyed
+# draws are idempotent, so only attempt-keyed allocation faults can
+# chain — at any sane p_alloc the chance of 50 in a row is nil, and a
+# loop this long means the fault plan (or a repair) is broken
+_MAX_STEP_ATTEMPTS = 50
 
 
 @dataclass
@@ -182,6 +234,22 @@ class EngineConfig:
     #                               (slot planes only: pooled page-run
     #                               snapshots are synchronous for now)
     min_bucket: int = 8           # smallest tail bucket of the ladder
+    # --- failure model (step transactions + fault injection) ----------- #
+    faults: Optional[Any] = None  # a serving.faults.FaultSpec; written
+    #                               through to SchedulerConfig.faults
+    #                               (like page_size) so engine and
+    #                               simulator draw one fault schedule.
+    #                               Typed Any: the core scheduler config
+    #                               mirrors the field and must not
+    #                               import the serving layer
+    straggler_factor: Optional[float] = None  # arm StragglerMonitor: a
+    #                               step whose measured wall time
+    #                               exceeds factor x the cost model's
+    #                               predicted dt requeues every running
+    #                               request through the scheduler's
+    #                               preemption path.  Wall-clock
+    #                               dependent — leave None (off) in
+    #                               parity/chaos tests
 
 
 def _bucket_ladder(chunk: int, min_bucket: int) -> List[int]:
@@ -214,8 +282,10 @@ class Engine:
         ecfg = replace(ecfg) if ecfg is not None else EngineConfig()
         if cfg.window:
             ecfg.chunk = min(ecfg.chunk, cfg.window)
-        assert ecfg.plane in ("batched", "legacy", "paged"), ecfg.plane
-        assert ecfg.decode_append in ("inline", "deferred"), ecfg.decode_append
+        if ecfg.plane not in ("batched", "legacy", "paged"):
+            raise ValueError(f"unknown plane {ecfg.plane!r}")
+        if ecfg.decode_append not in ("inline", "deferred"):
+            raise ValueError(f"unknown decode_append {ecfg.decode_append!r}")
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -239,12 +309,14 @@ class Engine:
             scheduler.cfg.cache_policy = ecfg.cache_policy
         if ecfg.cache_demotion is not None:
             scheduler.cfg.cache_demotion = ecfg.cache_demotion
+        if ecfg.faults is not None:
+            scheduler.cfg.faults = ecfg.faults
         # pooled paged data plane: only unbounded dense-attention
         # families are pooled; bounded-state families keep slots
         self._pooled = ecfg.plane == "paged" and paged_supported(cfg)
-        if scheduler.cfg.partial_preempt:
-            assert self._pooled, \
-                "partial_preempt needs the pooled paged data plane"
+        if scheduler.cfg.partial_preempt and not self._pooled:
+            raise ValueError(
+                "partial_preempt needs the pooled paged data plane")
         self._demotion = bool(scheduler.cfg.cache_demotion) \
             and self._pooled and ecfg.prefix_sharing
         self.allocator = PagedAllocator(
@@ -277,6 +349,26 @@ class Engine:
         self.outputs: Dict[int, List[int]] = {}
         self.buckets = _bucket_ladder(ecfg.chunk, ecfg.min_bucket)
         self.swap_store = KVSwapStore(capacity_bytes=ecfg.swap_bytes)
+        # --- failure model: fault plan + step-transaction machinery ----- #
+        self.fault_plan: Optional[FaultPlan] = (
+            FaultPlan(scheduler.cfg.faults)
+            if scheduler.cfg.faults is not None else None)
+        if self.fault_plan is not None:
+            self.allocator.fault_hook = self._alloc_fault_hook
+        self._attempt = 0           # retry index of the current step
+        self._alloc_ordinal = 0     # allocation counter within an attempt
+        self._last_dt = 0.0         # predicted dt of the last batch
+        self._last_wall = 0.0       # measured wall of the last batch
+        # abort-history counters — deliberately OUTSIDE the step txn:
+        # they record aborted attempts, and rolling the step back must
+        # not erase the record of the rollback itself
+        self.recovery_stats: Dict[str, float] = dict(
+            rollbacks=0, alloc_faults=0, integrity_failures=0,
+            degraded_recomputes=0, straggler_requeues=0,
+            wall_aborted_s=0.0)
+        self._straggler: Optional[StragglerMonitor] = (
+            StragglerMonitor(deadline_factor=ecfg.straggler_factor)
+            if ecfg.straggler_factor else None)
         # in-flight async swap-out snapshots (rid -> (store entry whose
         # cache leaves are still device arrays mid-D2H, enqueue step)).
         # An entry enqueued during step N overlaps its D2H copy with
@@ -299,7 +391,12 @@ class Engine:
             drains_on_swapin=0, wall_out_s=0.0, wall_in_s=0.0,
             promotions=0, demotions=0, demote_drops=0,
             kv_promoted=0, kv_demoted=0,
-            wall_promote_s=0.0, wall_demote_s=0.0)
+            wall_promote_s=0.0, wall_demote_s=0.0,
+            # fault-injection counters: inside the step txn (this dict
+            # is snapshotted), so an aborted attempt's draws roll back
+            # and its retry does not double-count them
+            permanent_store_failures=0, transient_retries=0,
+            backoff_s=0.0, prefix_integrity=0)
         # virtual-time owed by prefix-tier traffic (demotions fire inside
         # allocator reclaims; promotions inside the prefix attach) —
         # folded into the CURRENT batch's swap_s before its dt is priced
@@ -405,12 +502,17 @@ class Engine:
 
     # ------------------------------------------------------------------ #
     def submit(self, r: Request) -> None:
-        assert r.prompt is not None, "engine requests need real token ids"
-        assert len(r.prompt) == r.input_len
+        if r.prompt is None:
+            raise ValueError("engine requests need real token ids")
+        if len(r.prompt) != r.input_len:
+            raise ValueError(
+                f"request {r.rid}: prompt length {len(r.prompt)} != "
+                f"input_len {r.input_len}")
         # window/ssm archs hold bounded state; dense caches must fit
-        assert self.cfg.window or self.cfg.family == "ssm" \
-            or r.peak_kv <= self.ecfg.cache_len, \
-            f"request {r.rid} peak KV {r.peak_kv} > cache_len"
+        if not (self.cfg.window or self.cfg.family == "ssm"
+                or r.peak_kv <= self.ecfg.cache_len):
+            raise ValueError(
+                f"request {r.rid} peak KV {r.peak_kv} > cache_len")
         self.token_ids[r.rid] = list(r.prompt)
         self.outputs[r.rid] = []
         self.sched.add_request(r)
@@ -431,6 +533,107 @@ class Engine:
         # refill restarts from scratch: drop generated tokens beyond prompt?
         # NO — generated tokens are kept and re-prefilled (paper §3 refill).
 
+    # --- failure model: fault hooks, guarded puts, integrity ----------- #
+    def _alloc_fault_hook(self, need: int) -> None:
+        """``PagedAllocator.fault_hook``: a transient device fault on
+        this (step, attempt, ordinal) aborts the attempt.  Keyed by
+        attempt so the rolled-back retry draws fresh (no livelock), and
+        trace-free by construction — an aborted attempt leaves no
+        parity-visible state, so the simulator never mirrors these."""
+        self._alloc_ordinal += 1
+        if self.fault_plan.alloc_fault(self._step_no, self._attempt,
+                                       self._alloc_ordinal):
+            raise FaultError(
+                f"injected allocation fault: step {self._step_no} "
+                f"attempt {self._attempt} ordinal {self._alloc_ordinal}")
+
+    def _retry_sleep(self, seconds: float) -> None:
+        """Injectable backoff clock for ``run_with_retries``: records
+        the schedule in virtual time instead of stalling the step."""
+        self.swap_stats["backoff_s"] += seconds
+
+    _PERM_KIND = {"store_put": "perm_put", "store_run": "perm_run"}
+
+    def _guarded_put(self, kind: str, key: Tuple, do_put):
+        """Run a swap-store write under the fault plan.  A permanent
+        draw raises ``PermanentStoreError`` — a ``SwapStoreFullError``
+        subclass, so the caller's full-store fallback (drop + degrade
+        to recompute) handles it unchanged.  A transient draw fails the
+        write 1-3 times and then succeeds under ``run_with_retries``'s
+        exponential backoff (rung 1 of the degradation ladder; the
+        injected failures always fit the retry budget, so a transient
+        fault alone never escalates)."""
+        plan = self.fault_plan
+        if plan is None:
+            return do_put()
+        if plan.decide(self._PERM_KIND[kind], *key):
+            self.swap_stats["permanent_store_failures"] += 1
+            raise PermanentStoreError(
+                f"injected permanent store failure {kind}{key}")
+        remaining = [plan.transient_failures(kind, *key)]
+
+        def attempt():
+            if remaining[0] > 0:
+                remaining[0] -= 1
+                self.swap_stats["transient_retries"] += 1
+                raise TransientStoreError(
+                    f"injected transient store failure {kind}{key}")
+            return do_put()
+
+        return run_with_retries(attempt, retries=3,
+                                retry_on=(TransientStoreError,),
+                                sleep=self._retry_sleep)
+
+    def _corrupt_draw(self, kind: str, key: Tuple) -> bool:
+        return (self.fault_plan is not None
+                and self.fault_plan.decide(kind, *key))
+
+    def _finalize_entry(self, entry) -> None:
+        """Seal an entry's host bytes once; apply a pending corruption
+        marker exactly once.  The seal-once guard doubles as the
+        flip-once guard: after a step rollback the engine may re-drain
+        an already-finalized entry (entry objects are shared by
+        reference across snapshots — see ``txn.snapshot_store``), and
+        re-sealing would bless the corruption while re-flipping would
+        undo it."""
+        if entry.crc is not None:
+            return
+        seal_entry(entry)
+        if entry.corrupt and entry.crc is not None:
+            flip_bit(entry.cache if isinstance(entry, SwapEntry)
+                     else entry.kv)
+
+    def _drop_snapshot_repair(self, r: Request):
+        """Post-rollback repair for a corrupt full-slot snapshot: drop
+        the entry and degrade ``r`` to recompute (the suspend never
+        stuck, exactly like the store-full fallback)."""
+        def repair() -> None:
+            self.swap_store.discard(r.rid)
+            self._pending_swaps.pop(r.rid, None)
+            r.drop_suspended()
+            self.sched.num_swaps -= 1
+        return repair
+
+    def _drop_runs_repair(self, r: Request, claim: bool):
+        """Post-rollback repair for a corrupt page run: drop EVERY
+        stored run of ``r`` (a tiling with a rotten stripe is
+        unrestorable as a whole) and unwind the matching swap counters —
+        the same arithmetic as the store-full fallbacks — degrading the
+        request to recompute."""
+        def repair() -> None:
+            if claim:                      # fully suspended victim
+                n = self.swap_store.discard_runs(r.rid)
+                for _ in range(n - 1):     # tail runs beyond the base
+                    r.swaps -= 1
+                    self.sched.num_swaps -= 1
+                r.drop_suspended()
+                self.sched.num_swaps -= 1
+            else:                          # partially shed victim
+                for run in self.swap_store.pop_runs(r.rid):
+                    r.drop_tail_run(run.num_tokens)
+                    self.sched.num_swaps -= 1
+        return repair
+
     # --- §5.4 swap data plane ------------------------------------------ #
     def _swap_out(self, victim: Request) -> bool:
         """Snapshot the victim's slot to the host store, then free it.
@@ -445,25 +648,35 @@ class Engine:
         t0 = time.perf_counter()
         slot = self.slot_of[victim.rid]
         snap = self._slot_slice(self.cache, jnp.int32(slot))
+        # content key: identical across engine/simulator and across
+        # aborted-attempt retries, so fault draws are idempotent
+        fkey = (victim.rid, victim.suspended_m, victim.swaps)
         try:
             if self.ecfg.async_swap:
                 nbytes = sum(l.nbytes for l in jax.tree.leaves(snap))
-                entry = self.swap_store.put(
-                    victim.rid, snap, self.token_ids[victim.rid],
-                    victim.suspended_m, nbytes=nbytes)
+                entry = self._guarded_put(
+                    "store_put", fkey,
+                    lambda: self.swap_store.put(
+                        victim.rid, snap, self.token_ids[victim.rid],
+                        victim.suspended_m, nbytes=nbytes))
+                entry.corrupt = self._corrupt_draw("corrupt_put", fkey)
                 for leaf in jax.tree.leaves(snap):
                     leaf.copy_to_host_async()
                 self._pending_swaps[victim.rid] = (entry, self._step_no)
             else:
                 snap = jax.device_get(snap)  # repro: allow-host-sync(the synchronous swap-out path async_swap=False selects; charged swap_time in virtual time and measured into wall_out_s)
-                self.swap_store.put(victim.rid, snap,
-                                    self.token_ids[victim.rid],
-                                    victim.suspended_m)
+                entry = self._guarded_put(
+                    "store_put", fkey,
+                    lambda: self.swap_store.put(
+                        victim.rid, snap, self.token_ids[victim.rid],
+                        victim.suspended_m))
                 if self.ecfg.check_invariants:
                     # repro: allow-host-sync(invariant check reads the already-fetched host snapshot; no extra device traffic)
                     assert int(np.asarray(snap["index"])[0]) \
                         == victim.suspended_m, \
                         (victim.rid, snap["index"], victim.suspended_m)
+                entry.corrupt = self._corrupt_draw("corrupt_put", fkey)
+                self._finalize_entry(entry)
         except SwapStoreFullError:
             victim.drop_suspended()
             self.sched.num_swaps -= 1   # the suspend did not stick
@@ -507,6 +720,7 @@ class Engine:
             if self.ecfg.check_invariants:
                 assert int(np.asarray(entry.cache["index"])[0]) \
                     == entry.num_kv, (r, entry.cache["index"], entry.num_kv)
+            self._finalize_entry(entry)   # CRC seal (+ fault-plan flip)
             self.swap_stats["wall_out_s"] += time.perf_counter() - t0
         if rid is None:
             if before_step is not None:
@@ -529,6 +743,7 @@ class Engine:
             return
         t0 = time.perf_counter()
         entry.kv = jax.device_get(entry.kv)  # repro: allow-host-sync(async demotion drain boundary - blocks only on its own already-started D2H page copy)
+        seal_entry(entry)   # prefix rot is modeled by flag, never flipped
         self.swap_stats["wall_demote_s"] += time.perf_counter() - t0
 
     def _swap_in(self, r: Request) -> None:
@@ -537,6 +752,12 @@ class Engine:
             # re-admitted within the drain window: finalize on demand
             self.swap_stats["drains_on_swapin"] += 1
             self._drain_swaps(rid=r.rid)
+        if not verify_entry(self.swap_store.peek(r.rid)):
+            # rung 3: corrupt snapshot — abort the step; post-rollback
+            # the repair drops the entry and degrades r to recompute
+            raise IntegrityError(
+                f"rid {r.rid}: corrupt swap snapshot",
+                repairs=[self._drop_snapshot_repair(r)])
         t0 = time.perf_counter()
         entry = self.swap_store.pop(r.rid)
         slot = self._claim_slot(r.rid, reset=False)  # fully overwritten
@@ -591,11 +812,18 @@ class Engine:
         t0 = time.perf_counter()
         tbl = self.allocator.table(victim.rid)
         device_tokens = tbl.num_tokens
+        # same key shape as the slot plane's full suspend, so the
+        # simulator's fault mirror is plane-agnostic
+        fkey = (victim.rid, victim.suspended_m, victim.swaps)
         try:
             self._check_run_capacity(len(tbl.pages))  # before the D2H copy
-            self.swap_store.put_run(victim.rid, start=0,
-                                    num_tokens=device_tokens,
-                                    kv=self._snapshot_pages(tbl.pages))
+            entry = self._guarded_put(
+                "store_put", fkey,
+                lambda: self.swap_store.put_run(
+                    victim.rid, start=0, num_tokens=device_tokens,
+                    kv=self._snapshot_pages(tbl.pages)))
+            entry.corrupt = self._corrupt_draw("corrupt_put", fkey)
+            self._finalize_entry(entry)   # pooled suspends are sync
         except SwapStoreFullError:
             # stored tail runs are unrestorable without the device
             # portion: unwind their swap counts along with this one
@@ -626,11 +854,19 @@ class Engine:
         swapped = False
         if mode == "swap":
             t0 = time.perf_counter()
+            # r.m is already reduced to the run's start by the
+            # scheduler's partial_preempt, so this key is stable across
+            # attempt retries and reproducible by the simulator
+            fkey = (r.rid, r.m, n_tokens, r.partial_preemptions)
             try:
                 self._check_run_capacity(npages)   # before the D2H copy
-                self.swap_store.put_run(
-                    r.rid, start=start, num_tokens=n_tokens,
-                    kv=self._snapshot_pages(tbl.pages[-npages:]))
+                entry = self._guarded_put(
+                    "store_run", fkey,
+                    lambda: self.swap_store.put_run(
+                        r.rid, start=start, num_tokens=n_tokens,
+                        kv=self._snapshot_pages(tbl.pages[-npages:])))
+                entry.corrupt = self._corrupt_draw("corrupt_run", fkey)
+                self._finalize_entry(entry)   # tail sheds are sync
                 swapped = True
                 self.swap_stats["swap_outs"] += 1
                 self.swap_stats["kv_out"] += n_tokens
@@ -665,6 +901,14 @@ class Engine:
         self._restore_runs(r, claim=False, resume=r.resume_tail)
 
     def _restore_runs(self, r: Request, *, claim: bool, resume) -> None:
+        if not all(verify_entry(run)
+                   for run in self.swap_store.peek_runs(r.rid)):
+            # rung 3: one rotten stripe poisons the whole tiling —
+            # abort; the post-rollback repair drops every stored run
+            # and degrades r to recompute
+            raise IntegrityError(
+                f"rid {r.rid}: corrupt page run",
+                repairs=[self._drop_runs_repair(r, claim)])
         t0 = time.perf_counter()
         runs = self.swap_store.pop_runs(r.rid)
         total = sum(run.num_tokens for run in runs)
@@ -683,7 +927,7 @@ class Engine:
         pg = self.ecfg.page_size
         tbl = self.allocator.table(rid)
         for run in runs:
-            assert run.start % pg == 0, (rid, run.start)
+            invariant(run.start % pg == 0, (rid, run.start))
             p0 = run.start // pg
             npg = -(-run.num_tokens // pg)
             self._restore_pages(tbl.pages[p0:p0 + npg], run.kv)
@@ -721,6 +965,14 @@ class Engine:
         win."""
         if self.swap_store.has_prefix(key):
             return          # an identical snapshot is already host-resident
+        if self.fault_plan is not None \
+                and self.fault_plan.decide("demote_fail", key):
+            # the async D2H copy "never lands": drop the demotion — the
+            # page recomputes on its next miss, the pre-demotion
+            # behaviour — with no charge.  PrefixTierSim mirrors the
+            # same draw, so demote_drops stays parity-comparable.
+            self.swap_stats["demote_drops"] += 1
+            return
         t0 = time.perf_counter()
         try:
             self._check_run_capacity(1)     # metadata check BEFORE the D2H
@@ -734,8 +986,8 @@ class Engine:
                 kv["v"].copy_to_host_async()
                 self._pending_demotes[key] = self._step_no
             else:
-                self.swap_store.put_prefix(key, tokens, n_kvs,
-                                           self._snapshot_pages([page]))
+                seal_entry(self.swap_store.put_prefix(
+                    key, tokens, n_kvs, self._snapshot_pages([page])))
         except SwapStoreFullError:
             self.swap_stats["demote_drops"] += 1
             return
@@ -748,6 +1000,24 @@ class Engine:
         # transfer(s) outside the timed enqueue window above
         while len(self._pending_demotes) > 2:
             self._drain_demotes(key=next(iter(self._pending_demotes)))
+
+    def _verify_prefix(self, entry) -> bool:
+        """Promotion gate of ``attach_prefix_run``: CRC-check the
+        host-resident page and consult the fault plan —
+        ``corrupt_prefix`` models rot the CRC would catch on a drained
+        entry (flagged, never byte-flipped: async drain timing must not
+        diverge engine from simulator), ``promote_fail`` a failed host
+        read.  A bad entry is dropped by the attach (the page
+        recomputes); counted in ``swap_stats`` (step-txn scoped) so the
+        simulator mirror stays parity-comparable."""
+        plan = self.fault_plan
+        ok = verify_entry(entry) and not (
+            plan is not None
+            and (plan.decide("corrupt_prefix", entry.key)
+                 or plan.decide("promote_fail", entry.key)))
+        if not ok:
+            self.swap_stats["prefix_integrity"] += 1
+        return ok
 
     def _promote_restore(self, page: int, kv) -> None:
         t0 = time.perf_counter()
@@ -775,7 +1045,8 @@ class Engine:
             self.allocator, r.rid, self._page_keys(r)[:cap],
             self._page_tokens(r, cap),
             host_tier=self.swap_store if self._demotion else None,
-            restore=self._promote_restore)
+            restore=self._promote_restore,
+            verify=self._verify_prefix if self._demotion else None)
         if promoted:
             self._tier_swap_s += self._swap_time(promoted)
             self.swap_stats["promotions"] += promoted // pg
@@ -942,11 +1213,134 @@ class Engine:
 
     # ------------------------------------------------------------------ #
     def step(self) -> int:
-        """Run one scheduler batch. Returns the number of items executed."""
+        """Run one scheduler batch ATOMICALLY.  Returns the number of
+        items executed.
+
+        The whole batch — preemptions, swap-outs/ins, slot claims,
+        prefix attach/CoW, allocation, pricing, compute — runs inside a
+        step transaction (``serving.txn``).  An injected transient
+        device fault (``FaultError``) or a corrupt host snapshot
+        (``IntegrityError``) aborts the attempt: every control-plane
+        participant rolls back to batch start, the error's repairs drop
+        any poisoned entries (degrading their requests to recompute),
+        and the step retries — so generated tokens are identical to the
+        fault-free run by construction.  A real ``OutOfPagesError``
+        also rolls back (the caller observes invariant-clean state) but
+        re-raises: it signals an accounting bug, not a survivable
+        fault."""
         if not self.sched.has_work():
             return 0
-        t0 = time.perf_counter()
         self._step_no += 1
+        for attempt in range(_MAX_STEP_ATTEMPTS):
+            self._attempt, self._alloc_ordinal = attempt, 0
+            txn = self._begin_txn()
+            t0 = time.perf_counter()
+            try:
+                executed = self._step_attempt()
+            except (FaultError, IntegrityError) as e:
+                txn.rollback()
+                aborted_s = time.perf_counter() - t0
+                self.wall += aborted_s
+                self.recovery_stats["rollbacks"] += 1
+                self.recovery_stats["wall_aborted_s"] += aborted_s
+                if isinstance(e, IntegrityError):
+                    self.recovery_stats["integrity_failures"] += 1
+                    self.recovery_stats["degraded_recomputes"] += 1
+                    for repair in e.repairs:   # on rolled-back state
+                        repair()
+                else:
+                    self.recovery_stats["alloc_faults"] += 1
+                continue
+            except OutOfPagesError:
+                txn.rollback()
+                self.recovery_stats["rollbacks"] += 1
+                raise
+            if (self._straggler is not None and executed
+                    and self._straggler.observe(predicted_s=self._last_dt,
+                                                actual_s=self._last_wall)):
+                self._requeue_stragglers()
+            return executed
+        raise RuntimeError(
+            f"step {self._step_no}: {_MAX_STEP_ATTEMPTS} fault-recovery "
+            f"attempts exhausted")
+
+    def _begin_txn(self) -> StepTxn:
+        """Open the step transaction: common participants via
+        ``begin_step_txn`` plus the engine-local view.  Device KV needs
+        only reference saves — JAX arrays are immutable, so restoring
+        ``cache``/``k_pools``/``v_pools`` rolls back every in-step
+        scatter for free."""
+        txn = begin_step_txn(
+            scheduler=self.sched, allocator=self.allocator,
+            store=self.swap_store,
+            requests=self.sched.waiting + self.sched.running)
+        cache = self.cache
+        pools = (self.k_pools, self.v_pools) if self._pooled else None
+        slot_of, free_slots = dict(self.slot_of), list(self.free_slots)
+        token_ids = {k: list(v) for k, v in self.token_ids.items()}
+        outputs = {k: list(v) for k, v in self.outputs.items()}
+        page_keys = dict(self._page_keys_of)
+        skip = dict(self._prefix_skip)
+        bt_cache = self._bt_cache
+        pending = OrderedDict(self._pending_swaps)
+        demotes = OrderedDict(self._pending_demotes)
+        scalars = (self._tier_swap_s, self._carry_swap_s,
+                   self._carry_out, self.now)
+        stats = dict(self.swap_stats)
+        nlogs = len(self.batch_logs)
+
+        def restore() -> None:
+            self.cache = cache
+            if pools is not None:
+                self.k_pools, self.v_pools = pools
+            self.slot_of, self.free_slots = dict(slot_of), list(free_slots)
+            self.token_ids = {k: list(v) for k, v in token_ids.items()}
+            self.outputs = {k: list(v) for k, v in outputs.items()}
+            self._page_keys_of = dict(page_keys)
+            self._prefix_skip = dict(skip)
+            self._bt_cache = bt_cache
+            self._pending_swaps = OrderedDict(pending)
+            self._pending_demotes = OrderedDict(demotes)
+            (self._tier_swap_s, self._carry_swap_s,
+             self._carry_out, self.now) = scalars
+            self.swap_stats = dict(stats)
+            del self.batch_logs[nlogs:]
+
+        txn.add(restore)
+        return txn
+
+    def _requeue_stragglers(self) -> None:
+        """``StragglerMonitor`` flagged the step (measured wall far past
+        the cost-model prediction): requeue every running request
+        through the scheduler's preemption path so the next batch
+        re-plans from a clean slate.  Swap charges are owed to the next
+        executed batch, exactly like an empty-admission round."""
+        self.recovery_stats["straggler_requeues"] += 1
+        for victim in list(self.sched.running):
+            self.sched._preempt(victim)
+            s, o = self._handle_preempted(victim)
+            self._carry_swap_s += s
+            self._carry_out += o
+
+    def _handle_preempted(self, victim: Request) -> Tuple[float, int]:
+        """Free (or swap out) one full-preemption victim; returns the
+        (virtual swap time, swap-out count) owed to the draining
+        batch."""
+        if victim.suspended:
+            m = victim.swap_out_m   # device-resident portion only
+            swapper = (self._swap_out_paged if self._pooled
+                       else self._swap_out)
+            if swapper(victim):      # False: store full, fell back
+                return self._swap_time(m), 1
+        else:
+            if self._pooled:
+                self.swap_store.discard_runs(victim.rid)
+            self._release(victim.rid)
+        return 0.0, 0
+
+    def _step_attempt(self) -> int:
+        """One attempt at the current step (see ``step``)."""
+        t0 = time.perf_counter()
         self.allocator.now = self.now   # replacement-policy clock
         batch = self.sched.get_next_batch()
         swap_s = 0.0
@@ -978,17 +1372,9 @@ class Engine:
                 swap_s += self._swap_time(n_tokens)
                 num_swap_out += 1
         for victim in batch.preempted:
-            if victim.suspended:
-                m = victim.swap_out_m   # device-resident portion only
-                swapper = (self._swap_out_paged if self._pooled
-                           else self._swap_out)
-                if swapper(victim):      # False: store full, fell back
-                    swap_s += self._swap_time(m)
-                    num_swap_out += 1
-            else:
-                if self._pooled:
-                    self.swap_store.discard_runs(victim.rid)
-                self._release(victim.rid)
+            s, o = self._handle_preempted(victim)
+            swap_s += s
+            num_swap_out += o
         if not batch.items:
             # swap-outs still happened: owe their virtual-time charge to
             # the next executed batch (mirrors the simulator's carry)
@@ -1109,6 +1495,7 @@ class Engine:
         self._drain_swaps(before_step=self._step_no)
         wall_s = time.perf_counter() - t0
         self.wall += wall_s
+        self._last_dt, self._last_wall = dt, wall_s   # straggler inputs
         if self.ecfg.check_invariants:
             self.allocator.check_invariants()
             self.swap_store.check_invariants()
@@ -1133,14 +1520,14 @@ class Engine:
                     continue
                 nt = (self.allocator.table(r.rid).num_tokens
                       if self.allocator.has(r.rid) else 0)
-                assert nt == r.m, (r.rid, nt, r.m)
+                invariant(nt == r.m, (r.rid, nt, r.m))
             return
         idx = np.asarray(self.cache["index"])  # repro: allow-host-sync(check_invariants-gated debug validation; off in benchmark configurations)
         for r, _ in batch.items:
             if r.finished or r.rid not in self.slot_of:
                 continue
             slot = self.slot_of[r.rid]
-            assert idx[slot] == r.m, (r.rid, idx[slot], r.m)
+            invariant(idx[slot] == r.m, (r.rid, idx[slot], r.m))
 
     # ------------------------------------------------------------------ #
     def run(self, requests: Sequence[Request],
@@ -1178,7 +1565,8 @@ class Engine:
         return EngineResult(outputs=dict(self.outputs), metrics=sim,
                             wall_time=self.wall,
                             swap_stats=dict(self.swap_stats),
-                            num_compiles=self.num_compiles)
+                            num_compiles=self.num_compiles,
+                            recovery_stats=dict(self.recovery_stats))
 
 
 @dataclass
@@ -1188,6 +1576,7 @@ class EngineResult:
     wall_time: float
     swap_stats: Dict[str, float] = field(default_factory=dict)
     num_compiles: int = 0
+    recovery_stats: Dict[str, float] = field(default_factory=dict)
 
 
 # --------------------------------------------------------------------- #

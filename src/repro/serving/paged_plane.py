@@ -147,8 +147,9 @@ def build_paged_fns(cfg: ModelConfig, *, impl: str = "reference",
     gathered attention uses the reference SDPA (``impl`` selects only
     the decode backend via ``ops.paged_decode``'s dispatch).
     """
-    assert paged_supported(cfg), \
-        f"paged pools need unbounded dense attention, got {cfg.family!r}"
+    if not paged_supported(cfg):
+        raise ValueError("paged pools need unbounded dense attention, "
+                         f"got {cfg.family!r}")
     vocab = cfg.vocab_size
 
     def _block(lp, x, attn_out):

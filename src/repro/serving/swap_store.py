@@ -30,13 +30,24 @@ Three entry granularities share the byte budget:
   Unlike suspend entries, demoted prefixes may legitimately outlive the
   run — ``__len__`` counts only suspend bookkeeping, so end-of-run
   leak checks stay meaningful.
+
+Integrity: every entry kind carries an optional CRC32 *seal*
+(``seal_entry``, computed once over the host bytes when they
+materialize — at put for sync paths, at drain for async ones) that
+``verify_entry`` re-checks at swap-in / promotion.  A mismatch means
+the host snapshot rotted (or the fault plan flipped a bit in it); the
+caller drops the entry and degrades the request to recompute rather
+than ever restoring wrong KV.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 import numpy as np
+
+from repro.core.invariants import invariant
 
 
 class SwapStoreFullError(RuntimeError):
@@ -51,6 +62,85 @@ def _tree_nbytes(tree: Any) -> int:
     return int(np.asarray(tree).nbytes)
 
 
+def _tree_crc(tree: Any, crc: int = 0) -> int:
+    """CRC32 over every array leaf, traversed in a deterministic order
+    (sorted dict keys) so the seal is content-addressed."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            crc = _tree_crc(tree[k], crc)
+        return crc
+    if isinstance(tree, (list, tuple)):
+        for v in tree:
+            crc = _tree_crc(v, crc)
+        return crc
+    arr = np.ascontiguousarray(np.asarray(tree))
+    return zlib.crc32(arr.tobytes(), crc)
+
+
+def seal_entry(entry: Any) -> None:
+    """Stamp ``entry.crc`` from its host bytes.  Idempotent: a second
+    seal is a no-op, which matters for crash recovery — after a step
+    rollback the engine may re-drain an entry whose bytes were already
+    sealed (and possibly corrupted by the fault plan); re-sealing would
+    bless the corruption."""
+    if entry.crc is not None:
+        return
+    data = entry.cache if isinstance(entry, SwapEntry) else entry.kv
+    if data is None:
+        return                       # metadata-only shadow (simulator)
+    entry.crc = _tree_crc(data)
+
+
+def verify_entry(entry: Any) -> bool:
+    """True iff the entry's bytes still match its seal (unsealed or
+    metadata-only entries verify trivially)."""
+    if entry.crc is None:
+        return True
+    data = entry.cache if isinstance(entry, SwapEntry) else entry.kv
+    if data is None:
+        return True
+    return _tree_crc(data) == entry.crc
+
+
+def _leaf_sites(tree: Any):
+    """Yield ``(parent, key, nbytes)`` for every array leaf reachable
+    through a mutable container (dict/list)."""
+    if isinstance(tree, dict):
+        items = [(tree, k, tree[k]) for k in sorted(tree)]
+    elif isinstance(tree, (list, tuple)):
+        items = [(tree, i, v) for i, v in enumerate(tree)]
+    else:
+        return
+    for parent, key, val in items:
+        if isinstance(val, (dict, list, tuple)):
+            yield from _leaf_sites(val)
+        else:
+            yield parent, key, int(np.asarray(val).nbytes)
+
+
+def flip_bit(tree: Any) -> bool:
+    """Corrupt the *largest* array leaf (one bit of byte 0) — the fault
+    plan's model of host-memory rot.  Targeting the biggest buffer
+    models where rot lands in practice (the KV bytes, not the few-byte
+    bookkeeping arrays riding in the same pytree) and keeps metadata
+    like the slot ``index`` array intact for the engine's drain-time
+    sanity asserts.  ``jax.device_get`` may hand back read-only views,
+    so the leaf is *replaced* in its parent container by a flipped host
+    copy rather than mutated in place.  Returns False if no leaf is
+    reachable through a mutable container."""
+    best = None
+    for parent, key, nbytes in _leaf_sites(tree):
+        if nbytes and (best is None or nbytes > best[2]):
+            best = (parent, key, nbytes)
+    if best is None or isinstance(best[0], tuple):
+        return False
+    parent, key, _ = best
+    arr = np.array(np.asarray(parent[key]), copy=True)
+    arr.view(np.uint8).reshape(-1)[0] ^= 1
+    parent[key] = arr
+    return True
+
+
 @dataclass
 class SwapEntry:
     rid: int
@@ -58,6 +148,8 @@ class SwapEntry:
     tokens: List[int]            # prompt + sampled tokens at suspend time
     num_kv: int                  # KV tokens held (Request.suspended_m)
     nbytes: int = field(default=0)
+    crc: Optional[int] = None    # integrity seal (seal_entry)
+    corrupt: bool = False        # fault-plan marker: bytes were flipped
 
     def __post_init__(self) -> None:
         if not self.nbytes:
@@ -77,6 +169,8 @@ class PageRunEntry:
     num_tokens: int
     kv: Any
     nbytes: int = field(default=0)
+    crc: Optional[int] = None
+    corrupt: bool = False
 
     def __post_init__(self) -> None:
         if not self.nbytes:
@@ -97,6 +191,8 @@ class PrefixPageEntry:
     n_kvs: int
     kv: Any
     nbytes: int = field(default=0)
+    crc: Optional[int] = None
+    corrupt: bool = False
 
     def __post_init__(self) -> None:
         if not self.nbytes and self.kv is not None:
@@ -107,7 +203,8 @@ class KVSwapStore:
     """rid -> suspended slot snapshot, with byte accounting."""
 
     def __init__(self, capacity_bytes: Optional[int] = None):
-        assert capacity_bytes is None or capacity_bytes > 0
+        if not (capacity_bytes is None or capacity_bytes > 0):
+            raise ValueError(f"capacity_bytes={capacity_bytes}")
         self.capacity_bytes = capacity_bytes
         self._entries: Dict[int, SwapEntry] = {}
         self._runs: Dict[int, List[PageRunEntry]] = {}
@@ -125,7 +222,8 @@ class KVSwapStore:
         finalizes the entry at drain time."""
         if rid in self._entries:
             raise ValueError(f"rid {rid} already suspended")
-        assert num_kv > 0, (rid, num_kv)
+        if num_kv <= 0:
+            raise ValueError(f"rid {rid}: num_kv={num_kv}")
         entry = SwapEntry(rid=rid, cache=cache, tokens=list(tokens),
                           num_kv=num_kv, nbytes=nbytes)
         if (self.capacity_bytes is not None
@@ -162,7 +260,8 @@ class KVSwapStore:
         """Suspend one contiguous run of rid's KV pages.  Runs stack:
         later runs sit BELOW earlier ones (the tail is shed top-down), so
         entries for a rid always tile a suffix of its context."""
-        assert num_tokens > 0, (rid, num_tokens)
+        if num_tokens <= 0:
+            raise ValueError(f"rid {rid}: num_tokens={num_tokens}")
         entry = PageRunEntry(rid=rid, start=start, num_tokens=num_tokens,
                              kv=kv)
         if (self.capacity_bytes is not None
@@ -171,7 +270,8 @@ class KVSwapStore:
                 f"rid {rid} run: {entry.nbytes}B over capacity "
                 f"({self._nbytes}/{self.capacity_bytes}B held)")
         runs = self._runs.setdefault(rid, [])
-        assert all(r.start != start for r in runs), (rid, start)
+        if any(r.start == start for r in runs):
+            raise ValueError(f"rid {rid}: run at start {start} exists")
         runs.append(entry)
         self._nbytes += entry.nbytes
         return entry
@@ -196,6 +296,10 @@ class KVSwapStore:
 
     def has_runs(self, rid: int) -> bool:
         return bool(self._runs.get(rid))
+
+    def peek_runs(self, rid: int) -> List[PageRunEntry]:
+        """Read-only view of rid's stored runs (integrity checks)."""
+        return list(self._runs.get(rid, []))
 
     def run_tokens(self, rid: int) -> int:
         return sum(r.num_tokens for r in self._runs.get(rid, []))
@@ -271,18 +375,19 @@ class KVSwapStore:
         recount = sum(e.nbytes for e in self._entries.values()) \
             + sum(r.nbytes for runs in self._runs.values() for r in runs) \
             + sum(p.nbytes for p in self._prefixes.values())
-        assert recount == self._nbytes, (recount, self._nbytes)
+        invariant(recount == self._nbytes, (recount, self._nbytes))
         if self.capacity_bytes is not None:
-            assert self._nbytes <= self.capacity_bytes
+            invariant(self._nbytes <= self.capacity_bytes,
+                      (self._nbytes, self.capacity_bytes))
         for rid, e in self._entries.items():
-            assert rid == e.rid and e.num_kv > 0, (rid, e.rid, e.num_kv)
+            invariant(rid == e.rid and e.num_kv > 0, (rid, e.rid, e.num_kv))
         for key, p in self._prefixes.items():
-            assert key == p.key and p.n_kvs > 0, (key, p.key, p.n_kvs)
+            invariant(key == p.key and p.n_kvs > 0, (key, p.key, p.n_kvs))
         for rid, runs in self._runs.items():
-            assert runs, rid
+            invariant(runs, rid)
             # runs tile a contiguous [min_start, end) span, no overlap
             spans = sorted((r.start, r.num_tokens) for r in runs)
             for (s0, n0), (s1, _) in zip(spans, spans[1:]):
-                assert s0 + n0 == s1, (rid, spans)
+                invariant(s0 + n0 == s1, (rid, spans))
             for r in runs:
-                assert r.rid == rid and r.num_tokens > 0, (rid, r)
+                invariant(r.rid == rid and r.num_tokens > 0, (rid, r))

@@ -11,7 +11,7 @@ import json
 import os
 import textwrap
 
-from repro.analysis import charges, hostsync, recompile
+from repro.analysis import asserts, charges, hostsync, recompile
 from repro.analysis.astutil import ModuleIndex
 from repro.analysis.findings import (apply_suppressions, load_baseline,
                                      parse_suppressions)
@@ -368,6 +368,62 @@ def test_config_mirror_missing_writethrough_flagged(tmp_path):
     mod = ModuleIndex(path, fixed)
     assert [f for f in charges.check_module(mod)
             if f.rule == charges.RULE_MIRROR] == []
+
+
+# --------------------------------------------------------------------- #
+# checker 5: bare asserts in the control plane
+# --------------------------------------------------------------------- #
+
+BARE_ASSERT = """
+    def alloc(self, need):
+        assert need > 0, need
+        return self._take(need)
+"""
+
+GATED_ASSERT = """
+    def step(self):
+        executed = self._run()
+        if self.cfg.check_invariants:
+            assert self._slots_consistent(), self.slot_of
+        return executed
+"""
+
+INVARIANT_CALL = """
+    from repro.core.invariants import invariant
+
+    def alloc(self, need):
+        invariant(need > 0, need)
+        return self._take(need)
+"""
+
+ALLOWED_BARE_ASSERT = """
+    def narrow(self, entry):
+        assert entry is not None  # repro: allow-bare-invariant-assert(type narrowing for the checker below)
+        return entry.kv
+"""
+
+
+def test_bare_assert_flagged():
+    fs = _blocking(_run(asserts.check_module, BARE_ASSERT), asserts.RULE)
+    assert len(fs) == 1 and "python -O" in fs[0].message
+
+
+def test_check_invariants_gated_assert_clean():
+    assert not _blocking(_run(asserts.check_module, GATED_ASSERT))
+
+
+def test_invariant_call_clean():
+    assert not _blocking(_run(asserts.check_module, INVARIANT_CALL))
+
+
+def test_suppressed_bare_assert_clean():
+    assert not _blocking(_run(asserts.check_module, ALLOWED_BARE_ASSERT))
+
+
+def test_bare_assert_out_of_scope_clean():
+    fs = _run(asserts.check_module, BARE_ASSERT,
+              path="src/repro/launch/tool.py")
+    assert _blocking(fs, asserts.RULE) == []
 
 
 # --------------------------------------------------------------------- #

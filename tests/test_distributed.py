@@ -346,3 +346,55 @@ def test_run_with_retries():
     with pytest.raises(ValueError):
         run_with_retries(lambda: (_ for _ in ()).throw(ValueError()),
                          retries=1, backoff_s=0.0)
+
+
+def test_run_with_retries_exhaustion_reraises():
+    from repro.distributed.fault_tolerance import run_with_retries
+    attempts = []
+
+    def always_fails():
+        attempts.append(1)
+        raise RuntimeError("permanent")
+
+    slept = []
+    with pytest.raises(RuntimeError, match="permanent"):
+        run_with_retries(always_fails, retries=3, backoff_s=0.1,
+                         sleep=slept.append)
+    # retries+1 total attempts; no sleep after the final failure
+    assert len(attempts) == 4
+    assert slept == [0.1, 0.2, 0.4]
+
+
+def test_run_with_retries_injected_sleep_schedule():
+    from repro.distributed.fault_tolerance import run_with_retries
+    slept = []
+    state = {"n": 0}
+
+    def fails_twice():
+        state["n"] += 1
+        if state["n"] <= 2:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert run_with_retries(fails_twice, retries=3, backoff_s=0.1,
+                            sleep=slept.append) == "ok"
+    # exponential backoff, virtual clock: 0.1, 0.2 — never 0.4
+    assert slept == [0.1, 0.2]
+
+
+def test_run_with_retries_custom_retry_on():
+    from repro.distributed.fault_tolerance import run_with_retries
+    state = {"n": 0}
+
+    def fails_once():
+        state["n"] += 1
+        if state["n"] == 1:
+            raise KeyError("transient")
+        return state["n"]
+
+    assert run_with_retries(fails_once, retries=1, backoff_s=0.0,
+                            retry_on=(KeyError,)) == 2
+    # RuntimeError is NOT retried when retry_on excludes it
+    with pytest.raises(RuntimeError):
+        run_with_retries(lambda: (_ for _ in ()).throw(RuntimeError()),
+                         retries=3, backoff_s=0.0, retry_on=(KeyError,))
