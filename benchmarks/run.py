@@ -64,6 +64,7 @@ def main(argv=None) -> int:
     t0 = time.time()
     failures = []
     records = []
+    payloads = {}
     ran = 0
     for name, mod, smoke_kw in MODULES:
         if args.filters and not any(f.lower() in name.lower()
@@ -74,7 +75,8 @@ def main(argv=None) -> int:
         print(f"\n{'='*72}\n>> {name}\n{'='*72}")
         t = time.time()
         try:
-            mod.run(**(smoke_kw if args.smoke else {}))
+            payloads[mod.__name__] = mod.run(
+                **(smoke_kw if args.smoke else {}))
             status = "ok"
             print(f"[ok] {name} ({time.time()-t:.1f}s)")
         except Exception:
@@ -102,6 +104,23 @@ def main(argv=None) -> int:
             "total_s": round(time.time() - t0, 2),
             "modules": records,
         })
+    wall = payloads.get("benchmarks.fig_engine_wall")
+    share = payloads.get("benchmarks.fig_prefix_sharing")
+    if args.smoke and wall and share:
+        # repo-root perf headline (PR 8): the two ratios the paged
+        # plane is accountable for — check.sh gates on the first
+        import json
+        bench8 = {
+            "paged_vs_batched_tps_ratio":
+                round(wall["paged_vs_batched_tps_ratio"], 4),
+            "shared_vs_unshared_tps_ratio":
+                round(share["shared_vs_unshared_tps_ratio"], 4),
+            "paged_tps": round(wall["paged"]["tps"], 2),
+            "batched_tps": round(wall["batched"]["tps"], 2),
+        }
+        with open("BENCH_8.json", "w") as f:
+            json.dump(bench8, f, indent=1)
+        print("BENCH_8.json:", bench8)
     if failures:
         print("failed:", ", ".join(failures))
         return 1

@@ -10,6 +10,9 @@
 #      plus the compiled-artifact audit (HLO scan + compile budget)
 #   3. every figure benchmark at smoke sizes (includes fig_engine_wall
 #      and fig_prefix_sharing); writes experiments/bench/BENCH_smoke.json
+#      and the repo-root BENCH_8.json perf headline
+#   4. perf gate — the paged plane must match or beat the batched dense
+#      plane on wall-clock tok/s (BENCH_8.json ratio >= 1.0)
 # Set CHECK_CHAOS=1 to additionally run the complete fault-injection
 # chaos matrix (tests/test_chaos.py including its `slow` sweeps); the
 # fast tier already covers the unmarked chaos smoke tests.
@@ -40,3 +43,17 @@ fi
 
 echo "== smoke benchmarks =="
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke
+
+echo "== perf gate (BENCH_8.json) =="
+python - <<'PY'
+import json
+import sys
+
+d = json.load(open("BENCH_8.json"))
+r = d["paged_vs_batched_tps_ratio"]
+print(f"paged/batched tok/s ratio: {r:.2f}  "
+      f"(shared/unshared: {d['shared_vs_unshared_tps_ratio']:.2f})")
+if r < 1.0:
+    print("FAIL: paged plane slower than batched dense plane")
+    sys.exit(1)
+PY

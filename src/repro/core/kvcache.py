@@ -181,6 +181,11 @@ class PagedAllocator:
         # its device-side block-table upload across decode steps and
         # invalidate it without tracking call sites by hand
         self.version = 0
+        # rids whose PAGE LIST changed since the last consume_dirty():
+        # the delta companion to ``version`` — a version bump tells the
+        # engine its device tables are stale, the dirty set tells it
+        # WHICH host rows to rewrite before the one refresh upload
+        self.dirty: Set[int] = set()
         # fault-injection hook: called as fault_hook(need) before pages
         # are taken — a seeded FaultPlan raises a transient FaultError
         # here to model device allocation failures (serving.faults)
@@ -216,6 +221,14 @@ class PagedAllocator:
 
     def has(self, rid: int) -> bool:
         return rid in self._tables
+
+    def consume_dirty(self) -> Set[int]:
+        """Return-and-clear the rids whose page lists changed since the
+        last call — the engine rewrites exactly those host block-table
+        rows before its one refresh upload (a freed rid may appear; the
+        caller skips rids with no slot)."""
+        dirty, self.dirty = self.dirty, set()
+        return dirty
 
     def pages_needed(self, rid: int, new_tokens: int) -> int:
         if new_tokens <= 0:
@@ -285,6 +298,7 @@ class PagedAllocator:
             # (decode filling its current page) must not invalidate the
             # engine's cached device block tables
             self.version += 1
+            self.dirty.add(rid)
         granted = self._take(need)
         tbl = self._tables.setdefault(rid, BlockTable())
         tbl.pages.extend(granted)
@@ -302,6 +316,7 @@ class PagedAllocator:
             invariant(self._refs.get(p, 0) > 0, f"page {p} is not live")
             self._refs[p] += 1
         self.version += 1
+        self.dirty.add(rid)
         self._tables[rid] = BlockTable(list(pages), num_tokens)
         self.stats["prefix_hits"] += 1
         self.stats["prefix_shared_tokens"] += num_tokens
@@ -317,6 +332,7 @@ class PagedAllocator:
         invariant(self._refs.get(page, 0) > 0, f"page {page} is not live")
         self._refs[page] += 1
         self.version += 1
+        self.dirty.add(rid)
         tbl.pages.append(page)
         tbl.num_tokens += num_tokens
         self.stats["prefix_shared_tokens"] += num_tokens
@@ -333,6 +349,7 @@ class PagedAllocator:
         if self._refs[page] == 1 and page not in self._pinned:
             return None
         self.version += 1
+        self.dirty.add(rid)
         new = self._take(1)[0]
         tbl.pages[page_index] = new
         self._decref(page)
@@ -346,6 +363,7 @@ class PagedAllocator:
         if tbl is None:
             return 0
         self.version += 1
+        self.dirty.add(rid)
         for p in reversed(tbl.pages):
             self._decref(p)
         return len(tbl.pages)
@@ -358,6 +376,7 @@ class PagedAllocator:
         invariant(0 < npages <= len(tbl.pages),
                   (rid, npages, len(tbl.pages)))
         self.version += 1
+        self.dirty.add(rid)
         removed = tbl.pages[-npages:]
         del tbl.pages[-npages:]
         kept_cap = len(tbl.pages) * self.page_size

@@ -2,4 +2,5 @@ from repro.kernels.paged_attention import ops, ref  # noqa: F401
 from repro.kernels.paged_attention.ops import (  # noqa: F401
     decode_attention_dense,
     paged_decode_attention,
+    paged_prefill_attention,
 )

@@ -1,12 +1,13 @@
-"""Jitted wrappers for paged decode attention.
+"""Jitted wrappers for paged attention (decode + fused prefill).
 
-``paged_decode`` is the engine's entry point (PR 4, ``plane="paged"``):
-on TPU it runs the Pallas flash-decoding kernel (scalar-prefetched block
-tables, page-granular DMA); on CPU it lowers to a jit-friendly jnp
-gather over the block table (``ref.paged_decode_reference``) instead of
-interpret-mode Pallas — the interpreter re-traces per grid instance and
-would dominate the offline suite's wall time.  Both read the SAME pooled
-layout ``(num_pages, page_size, Hkv, D)`` through the same tables."""
+``paged_decode`` / ``paged_prefill`` are the engine's entry points
+(``plane="paged"``): on TPU they run the Pallas kernels
+(scalar-prefetched block tables, page-granular DMA, prefill writing the
+chunk's K/V straight into the pools); on CPU they lower to jit-friendly
+jnp block-table gathers (``ref``) instead of interpret-mode Pallas —
+the interpreter re-traces per grid instance and would dominate the
+offline suite's wall time.  Both backends read the SAME pooled layout
+``(num_pages, page_size, Hkv, D)`` through the same tables."""
 from __future__ import annotations
 
 import functools
@@ -14,8 +15,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.paged_attention import paged_decode_bhd
-from repro.kernels.paged_attention.ref import paged_decode_reference
+from repro.kernels.paged_attention.paged_attention import (paged_decode_bhd,
+                                                           paged_prefill_bhd)
+from repro.kernels.paged_attention.ref import (paged_decode_reference,
+                                               paged_prefill_reference)
 
 
 def _on_cpu() -> bool:
@@ -55,6 +58,50 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            context_lens.astype(jnp.int32),
                            interpret=interpret)
     return out.reshape(B, H, D)
+
+
+def paged_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                  block_tables: jnp.ndarray, starts: jnp.ndarray,
+                  lengths: jnp.ndarray):
+    """Backend-dispatched fused paged prefill: q (B,c,H,D); k/v
+    (B,c,Hkv,D); pools (P, page, Hkv, D); block_tables (B, maxp) int32;
+    starts/lengths (B,) -> (out (B,c,H,D), new_k_pool, new_v_pool).
+    Writes the chunk's rows into the pools (padded rows drop) and
+    attends causally over [own pages ++ chunk].  Safe inside an
+    enclosing jit (the backend check is trace-time static)."""
+    if _on_cpu():
+        return paged_prefill_reference(q, k, v, k_pool, v_pool,
+                                       block_tables.astype(jnp.int32),
+                                       starts.astype(jnp.int32),
+                                       lengths.astype(jnp.int32))
+    return paged_prefill_attention(q, k, v, k_pool, v_pool, block_tables,
+                                   starts, lengths, interpret=False)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                            block_tables: jnp.ndarray, starts: jnp.ndarray,
+                            lengths: jnp.ndarray, *,
+                            interpret: bool | None = None):
+    """Pallas-kernel entry: q (B,c,H,D); k/v (B,c,Hkv,D); pools
+    (P, page, Hkv, D) -> (out (B,c,H,D), new_k_pool, new_v_pool)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, c, H, D = q.shape
+    Hkv = k_pool.shape[2]
+    G = H // Hkv
+    qg = (q.reshape(B, c, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, c * G, D))
+    out, new_k, new_v = paged_prefill_bhd(
+        qg, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        k_pool, v_pool, block_tables.astype(jnp.int32),
+        starts.astype(jnp.int32), lengths.astype(jnp.int32),
+        interpret=interpret)
+    out = (out.reshape(B, Hkv, c, G, D).transpose(0, 2, 1, 3, 4)
+           .reshape(B, c, H, D))
+    return out, new_k, new_v
 
 
 @functools.partial(jax.jit, static_argnames=("page_size", "interpret"))

@@ -87,14 +87,18 @@ Preemption supports BOTH §5.4 restoration paths, selected by
   (``swap_time`` vs ``kv_projection_time``/``recompute_time``).
 
 Swap-out transfers are ASYNC by default (``EngineConfig.async_swap``):
-the victim's slot slice is computed on device (a fresh buffer — later
-cache updates cannot alias it), ``copy_to_host_async`` starts the D2H
-transfer off the critical path, and the snapshot is finalized
+the victim's snapshot is computed on device (a fresh buffer — later
+cache/pool updates cannot alias it), ``copy_to_host_async`` starts the
+D2H transfer off the critical path, and the snapshot is finalized
 (double-buffered, at most two in flight) at the next step boundary or
 on demand when the victim is re-admitted within the same drain window.
-Store capacity is charged at enqueue time from array metadata — a full
-store still falls back to recompute synchronously — and virtual-time
-charges are identical to the sync path.
+This covers ALL host-bound KV traffic: the slot planes' whole-slot
+slices, the pooled plane's page-run suspend/shed gathers (whose fresh
+buffers are what let the freed pages be reused in the very same step),
+and the prefix tier's page demotions.  Store capacity is charged at
+enqueue time from array metadata — a full store still falls back to
+recompute synchronously — and virtual-time charges are identical to
+the sync path.
 
 Virtual time charges ``cost_model.swap_time`` for each swap-out and
 swap-in, mirroring the simulator, so simulated and engine schedules
@@ -230,9 +234,23 @@ class EngineConfig:
     #                               swap_time).  None = scheduler's.
     decode_append: str = "inline"   # "inline" | "deferred" (one cache
     #                                 scatter per step, §Perf cell A)
-    async_swap: bool = True       # double-buffered async swap-out D2H
-    #                               (slot planes only: pooled page-run
-    #                               snapshots are synchronous for now)
+    async_swap: bool = True       # double-buffered async swap-out D2H —
+    #                               covers the slot planes' whole-slot
+    #                               snapshots, the prefix tier's page
+    #                               demotions, AND the pooled plane's
+    #                               page-run suspend/shed snapshots
+    share_jits: bool = False      # reuse process-global jitted plane
+    #                               steps (keyed by model config) across
+    #                               Engine instances, so a fresh engine
+    #                               with a known config pays ZERO XLA
+    #                               compiles.  Off by default: sharing
+    #                               makes ``num_compiles`` a process-
+    #                               cumulative count, which the per-
+    #                               engine compile budgets / constancy
+    #                               tests must not see.  Benchmarks turn
+    #                               it on (with ``warmup()``) so timed
+    #                               windows price compute, not
+    #                               backend_compile
     min_bucket: int = 8           # smallest tail bucket of the ladder
     # --- failure model (step transactions + fault injection) ----------- #
     faults: Optional[Any] = None  # a serving.faults.FaultSpec; written
@@ -271,6 +289,141 @@ def _bucket_ladder(chunk: int, min_bucket: int) -> List[int]:
 def _slot_axis(leaf: jnp.ndarray) -> int:
     """Cache leaves are (L, B, ...) except index (B,)."""
     return 0 if leaf.ndim == 1 else 1
+
+
+# --------------------------------------------------------------------- #
+# plane step builders — module level so ``EngineConfig.share_jits`` can
+# cache the JITTED closures per model config: every Engine with the same
+# (cfg, impl, moe_impl) then shares one XLA compile cache, and a warmed
+# signature is never paid for twice in a process (benchmarks construct
+# several engines per figure; without sharing each re-compiles the same
+# cells inside its first — often timed — steps)
+# --------------------------------------------------------------------- #
+
+def _mask_merge(active, new_cache, old_cache):
+    def merge(new, old):
+        ax = _slot_axis(new)
+        m = active.reshape((1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
+        return jnp.where(m, new, old)
+    return jax.tree.map(merge, new_cache, old_cache)
+
+
+def _slot_slice_fn(cache, slot):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1,
+                                               _slot_axis(a)), cache)
+
+
+def _slot_write_fn(cache, upd, slot):
+    return jax.tree.map(
+        lambda a, u: jax.lax.dynamic_update_slice_in_dim(
+            a, u, slot, _slot_axis(a)), cache, upd)
+
+
+def _reset_slot_fn(cache, slot):
+    zeroed = jax.tree.map(
+        lambda a: jnp.zeros_like(
+            jax.lax.dynamic_slice_in_dim(a, slot, 1, _slot_axis(a))),
+        cache)
+    return _slot_write_fn(cache, zeroed, slot)
+
+
+def _make_slot_fns():
+    """Fresh per-engine aliases of the slot helpers.  jax keys its
+    compiled-executable cache on the wrapped callable, so jitting the
+    module-level functions directly would leak compile counts (and
+    ``num_compiles``) between engines even with ``share_jits=False``."""
+    def slot_slice(cache, slot):
+        return _slot_slice_fn(cache, slot)
+
+    def slot_write(cache, upd, slot):
+        return _slot_write_fn(cache, upd, slot)
+
+    def reset_slot(cache, slot):
+        return _reset_slot_fn(cache, slot)
+    return slot_slice, slot_write, reset_slot
+
+
+def _make_legacy_prefill(cfg: ModelConfig, impl: str, moe_impl: str):
+    def prefill_one(params, cache, slot, tokens):
+        sl = _slot_slice_fn(cache, slot)
+        logits, new_sl = M.prefill_chunk(cfg, params, tokens, sl,
+                                         impl=impl, moe_impl=moe_impl)
+        return logits[0], _slot_write_fn(cache, new_sl, slot)
+    return prefill_one
+
+
+def _make_batched_prefill(cfg: ModelConfig, impl: str, moe_impl: str):
+    chunk_fn = build_prefill_chunk_fn(cfg, impl=impl, moe_impl=moe_impl)
+    vocab = cfg.vocab_size
+
+    def prefill_many(params, cache, tokens, lengths):
+        """One batched bucketed chunk round over ALL slots.
+        tokens (nslots, bucket); lengths (nslots,), 0 = inert row.
+        Returns (greedy token ids (nslots,), merged cache) — fused
+        on-device sampling, full logits never leave the device."""
+        logits, new_cache = chunk_fn(params, tokens, cache, lengths)
+        toks = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+        return toks, _mask_merge(lengths > 0, new_cache, cache)
+    return prefill_many
+
+
+def _make_decode(cfg: ModelConfig, impl: str, moe_impl: str,
+                 decode_append: str):
+    decode_step = (M.decode_step_deferred if decode_append == "deferred"
+                   else M.decode_step)
+    vocab = cfg.vocab_size
+
+    def decode_many(params, cache, tokens, mask):
+        logits, new_cache = decode_step(cfg, params, tokens, cache,
+                                        impl=impl, moe_impl=moe_impl)
+        toks = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+        return toks, _mask_merge(mask, new_cache, cache)
+    return decode_many
+
+
+def _make_paged_step_fns(cfg: ModelConfig, impl: str, moe_impl: str):
+    pf, df = build_paged_fns(cfg, impl=impl, moe_impl=moe_impl)
+
+    def prefill_packed(params, k_pools, v_pools, grid, block_tables):
+        # one coalesced host->device transfer per round: the tokens,
+        # lengths and starts of every slot ride a single (nslots,
+        # bucket+2) int32 grid — [toks | lens | starts] — unpacked here
+        # (on-device slices are free next to three separate uploads)
+        toks = grid[:, :-2]
+        lens = grid[:, -2]
+        starts = grid[:, -1]
+        return pf(params, k_pools, v_pools, toks, starts, lens,
+                  block_tables)
+    return prefill_packed, df
+
+
+@functools.lru_cache(maxsize=1)
+def _shared_slot_jits():
+    return (jax.jit(_slot_slice_fn), jax.jit(_slot_write_fn),
+            jax.jit(_reset_slot_fn))
+
+
+@functools.lru_cache(maxsize=64)
+def _shared_legacy_jit(cfg: ModelConfig, impl: str, moe_impl: str):
+    return jax.jit(_make_legacy_prefill(cfg, impl, moe_impl))
+
+
+@functools.lru_cache(maxsize=64)
+def _shared_batched_jit(cfg: ModelConfig, impl: str, moe_impl: str):
+    return jax.jit(_make_batched_prefill(cfg, impl, moe_impl))
+
+
+@functools.lru_cache(maxsize=64)
+def _shared_decode_jit(cfg: ModelConfig, impl: str, moe_impl: str,
+                       decode_append: str):
+    return jax.jit(_make_decode(cfg, impl, moe_impl, decode_append))
+
+
+@functools.lru_cache(maxsize=64)
+def _shared_paged_jits(cfg: ModelConfig, impl: str, moe_impl: str):
+    pf, df = _make_paged_step_fns(cfg, impl, moe_impl)
+    return jax.jit(pf), jax.jit(df)
 
 
 class Engine:
@@ -340,9 +493,17 @@ class Engine:
         # shared-prefix bookkeeping (pooled plane): chained page keys per
         # rid and the per-grant data-plane skip from a registry hit
         self._page_keys_of: Dict[int, List[int]] = {}
+        self._page_tokens_of: Dict[int, List[Tuple[int, ...]]] = {}
         self._prefix_skip: Dict[int, int] = {}
         # (allocator version, device array) — see _block_tables_device
         self._bt_cache: Optional[Tuple[int, jnp.ndarray]] = None
+        # persistent host mirror of the device block tables: refreshed
+        # row-by-row from the allocator's dirty-rid delta (never rebuilt
+        # whole), then uploaded in ONE host->device transfer
+        self._bt_host: Optional[np.ndarray] = None
+        # device-resident decode inputs keyed by cohort — steady-state
+        # decode uploads NOTHING (see _run_decodes_paged)
+        self._decode_state: Optional[Dict[str, Any]] = None
         self.free_slots: List[int] = list(range(ecfg.nslots - 1, -1, -1))
         self.slot_of: Dict[int, int] = {}
         self.token_ids: Dict[int, List[int]] = {}
@@ -369,6 +530,12 @@ class Engine:
         self._straggler: Optional[StragglerMonitor] = (
             StragglerMonitor(deadline_factor=ecfg.straggler_factor)
             if ecfg.straggler_factor else None)
+        # wall-clock phase attribution of the pooled step (zero-copy
+        # prefix attach / prefill compute / host->device uploads) —
+        # OUTSIDE the step txn like ``wall``: time spent by an aborted
+        # attempt was still spent
+        self.phase_stats: Dict[str, float] = dict(
+            attach_s=0.0, prefill_s=0.0, upload_s=0.0)
         # in-flight async swap-out snapshots (rid -> (store entry whose
         # cache leaves are still device arrays mid-D2H, enqueue step)).
         # An entry enqueued during step N overlaps its D2H copy with
@@ -383,6 +550,13 @@ class Engine:
         # boundaries.  A promotion that lands before the drain simply
         # pops the entry — the bytes never round-trip.
         self._pending_demotes: "OrderedDict[int, int]" = OrderedDict()
+        # in-flight async pooled page-run snapshots ((rid, run start) ->
+        # (PageRunEntry whose kv leaves are device-side page gathers
+        # mid-D2H, enqueue step)) — keyed by run start because tail
+        # sheds can stack several runs per rid.  Drained at the same
+        # boundaries as _pending_swaps / _pending_demotes.
+        self._pending_runs: \
+            "OrderedDict[Tuple[int, int], Tuple[Any, int]]" = OrderedDict()
         self._step_no = 0
         # measured host-transfer wall times (fig08 validation column);
         # promotions/demotions are the prefix cache's host-tier traffic
@@ -413,85 +587,87 @@ class Engine:
     # ------------------------------------------------------------------ #
     def _build_jits(self) -> None:
         cfg, ecfg = self.cfg, self.ecfg
-        vocab = cfg.vocab_size
-
-        def mask_merge(active, new_cache, old_cache):
-            def merge(new, old):
-                ax = _slot_axis(new)
-                m = active.reshape(
-                    (1,) * ax + (-1,) + (1,) * (new.ndim - ax - 1))
-                return jnp.where(m, new, old)
-            return jax.tree.map(merge, new_cache, old_cache)
-
-        def slot_slice(cache, slot):
-            return jax.tree.map(
-                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1,
-                                                       _slot_axis(a)), cache)
-
-        def slot_write(cache, upd, slot):
-            return jax.tree.map(
-                lambda a, u: jax.lax.dynamic_update_slice_in_dim(
-                    a, u, slot, _slot_axis(a)), cache, upd)
-
-        def prefill_one(params, cache, slot, tokens):
-            sl = slot_slice(cache, slot)
-            logits, new_sl = M.prefill_chunk(cfg, params, tokens, sl,
-                                             impl=ecfg.impl,
-                                             moe_impl=ecfg.moe_impl)
-            return logits[0], slot_write(cache, new_sl, slot)
-
-        chunk_fn = build_prefill_chunk_fn(cfg, impl=ecfg.impl,
-                                          moe_impl=ecfg.moe_impl)
-
-        def prefill_many(params, cache, tokens, lengths):
-            """One batched bucketed chunk round over ALL slots.
-            tokens (nslots, bucket); lengths (nslots,), 0 = inert row.
-            Returns (greedy token ids (nslots,), merged cache) — fused
-            on-device sampling, full logits never leave the device."""
-            logits, new_cache = chunk_fn(params, tokens, cache, lengths)
-            toks = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
-            return toks, mask_merge(lengths > 0, new_cache, cache)
-
-        decode_step = (M.decode_step_deferred
-                       if ecfg.decode_append == "deferred"
-                       else M.decode_step)
-
-        def decode_many(params, cache, tokens, mask):
-            logits, new_cache = decode_step(cfg, params, tokens, cache,
-                                            impl=ecfg.impl,
-                                            moe_impl=ecfg.moe_impl)
-            toks = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
-            return toks, mask_merge(mask, new_cache, cache)
-
-        def reset_slot(cache, slot):
-            zeroed = jax.tree.map(
-                lambda a: jnp.zeros_like(
-                    jax.lax.dynamic_slice_in_dim(a, slot, 1, _slot_axis(a))),
-                cache)
-            return slot_write(cache, zeroed, slot)
-
-        self._prefill_one = jax.jit(prefill_one)
-        self._prefill_many = jax.jit(prefill_many)
-        self._decode_many = jax.jit(decode_many)
-        self._reset_slot = jax.jit(reset_slot)
+        key = (cfg, ecfg.impl, ecfg.moe_impl)
+        legacy = ecfg.plane == "legacy"
+        if ecfg.share_jits:
+            slot = _shared_slot_jits()
+            prefill_jit = (_shared_legacy_jit(*key) if legacy
+                           else _shared_batched_jit(*key))
+            decode_jit = _shared_decode_jit(*key, ecfg.decode_append)
+        else:
+            slot = tuple(jax.jit(f) for f in _make_slot_fns())
+            prefill_jit = jax.jit(_make_legacy_prefill(*key) if legacy
+                                  else _make_batched_prefill(*key))
+            decode_jit = jax.jit(_make_decode(*key, ecfg.decode_append))
         # swap data plane: slot snapshot (device->host) and slot restore
-        self._slot_slice = jax.jit(slot_slice)
-        self._slot_write = jax.jit(slot_write)
-        self._jit_fns = [self._prefill_one, self._prefill_many,
-                         self._decode_many, self._reset_slot,
-                         self._slot_slice, self._slot_write]
+        self._slot_slice, self._slot_write, self._reset_slot = slot
+        if legacy:
+            self._prefill_one = prefill_jit
+        else:
+            self._prefill_many = prefill_jit
+        self._decode_many = decode_jit
+        # num_compiles counts only the fns THIS plane can reach, so a
+        # shared cache (share_jits) never leaks another plane's
+        # signatures into this engine's count
+        self._jit_fns = [prefill_jit, decode_jit, *slot]
         if self._pooled:
-            pf, df = build_paged_fns(cfg, impl=ecfg.impl,
-                                     moe_impl=ecfg.moe_impl)
-            self._paged_prefill = jax.jit(pf)
-            self._paged_decode = jax.jit(df)
-            self._jit_fns += [self._paged_prefill, self._paged_decode]
+            if ecfg.share_jits:
+                ppf, pdf = _shared_paged_jits(*key)
+            else:
+                pf, df = _make_paged_step_fns(*key)
+                ppf, pdf = jax.jit(pf), jax.jit(df)
+            self._paged_prefill, self._paged_decode = ppf, pdf
+            self._jit_fns = [ppf, pdf]   # the pooled plane uses nothing else
+
+    def warmup(self) -> "Engine":
+        """Pre-compile every signature the run loop can hit — one
+        prefill per ladder bucket plus the fused decode — with inert
+        inputs (zero lengths, all-false masks): outputs are discarded
+        and pools/cache stay bit-identical.  Benchmarks call this before
+        their timed window (ideally with ``share_jits``) so measured
+        tok/s prices data movement and compute, not XLA's
+        backend_compile.  The legacy plane cannot warm up by
+        construction: its exact-shape signatures depend on request data
+        — which is precisely the shape-instability the bucket ladder
+        fixes."""
+        ns = self.ecfg.nslots
+        zi = jnp.zeros((ns,), jnp.int32)
+        za = jnp.zeros((ns,), bool)
+        if self._pooled:
+            bt = jnp.zeros((ns, self.max_pages), jnp.int32)
+            for b in self.buckets:
+                self._paged_prefill(self.params, self.k_pools,
+                                    self.v_pools,
+                                    jnp.zeros((ns, b + 2), jnp.int32), bt)
+            self._paged_decode(self.params, self.k_pools, self.v_pools,
+                               zi, zi, bt, za)
+            # the suspend/restore data plane too: page-run gathers and
+            # swap-in scatters build one eager executable per run
+            # length — a small discrete set bounded by the per-request
+            # page budget — and the first preemption would otherwise
+            # eat those compiles inside the timed window.  Scattering a
+            # page's own bytes back over itself is the identity, so the
+            # pools stay bit-identical.
+            for npg in range(1, self.max_pages + 1):
+                ids = jnp.zeros((npg,), jnp.int32)
+                for pool in (self.k_pools, self.v_pools):
+                    run = pool[:, ids]
+                    jax.block_until_ready(pool.at[:, ids].set(run))  # repro: allow-host-sync(warmup runs BEFORE the timed window by contract - blocking here is the point: compiles must finish before serving starts)
+        elif self.ecfg.plane != "legacy":
+            for b in self.buckets:
+                self._prefill_many(self.params, self.cache,
+                                   jnp.zeros((ns, b), jnp.int32), zi)
+            self._decode_many(self.params, self.cache, zi, za)
+            self._reset_slot(self.cache, 0)
+        return self
 
     @property
     def num_compiles(self) -> int:
-        """Distinct XLA compiles across every engine entry point.  The
-        batched plane keeps this a small constant — independent of
-        request count, prompt lengths, and preemptions (tested)."""
+        """Distinct XLA compiles across every entry point this plane
+        can reach.  The batched plane keeps this a small constant —
+        independent of request count, prompt lengths, and preemptions
+        (tested).  Under ``share_jits`` the caches are process-global,
+        so the count covers every engine sharing them."""
         return sum(f._cache_size() for f in self._jit_fns)
 
     def _bucket_for(self, n: int) -> int:
@@ -529,6 +705,10 @@ class Engine:
         slot = self.slot_of.pop(rid, None)
         if slot is not None:
             self.free_slots.append(slot)
+            if self._bt_host is not None:
+                # the freed rid won't be in slot_of at the next delta
+                # rebuild, so its row must be cleared here
+                self._bt_host[slot, :] = 0
         self.allocator.free(rid)  # repro: allow-unpriced-mutation(releasing pages moves no bytes; the preemption decision that led here was already charged - swap_time or refill compute - by the scheduler)
         # refill restarts from scratch: drop generated tokens beyond prompt?
         # NO — generated tokens are kept and re-prefilled (paper §3 refill).
@@ -621,6 +801,7 @@ class Engine:
         the same arithmetic as the store-full fallbacks — degrading the
         request to recompute."""
         def repair() -> None:
+            self._purge_pending_runs(r.rid)
             if claim:                      # fully suspended victim
                 n = self.swap_store.discard_runs(r.rid)
                 for _ in range(n - 1):     # tail runs beyond the base
@@ -701,9 +882,11 @@ class Engine:
         arrays.  ``rid`` drains one entry (same-window re-admission,
         double-buffer pressure); ``before_step`` drains entries enqueued
         before that step (the end-of-step boundary); neither drains
-        everything (end of run).  In-flight prefix demotions share the
-        ``before_step`` / drain-all boundaries (``rid`` is a slot-plane
-        concept; demotes drain per chain key via ``_drain_demotes``)."""
+        everything (end of run).  In-flight prefix demotions AND pooled
+        page-run snapshots share the ``before_step`` / drain-all
+        boundaries (``rid`` here is a slot-plane concept; demotes drain
+        per chain key via ``_drain_demotes``, runs per rid via
+        ``_drain_runs``)."""
         if rid is not None:
             rids = [rid] if rid in self._pending_swaps else []
         elif before_step is not None:
@@ -730,6 +913,7 @@ class Engine:
                 keys = list(self._pending_demotes)
             for k in keys:
                 self._drain_demotes(key=k)
+            self._drain_runs(before_step=before_step)
 
     def _drain_demotes(self, key: int) -> None:
         """Finalize one in-flight prefix-page demotion: block on the
@@ -791,8 +975,51 @@ class Engine:
 
     def _snapshot_pages(self, page_ids) -> Dict[str, np.ndarray]:
         ids = np.asarray(page_ids, np.int32)
-        return {"k": np.asarray(self.k_pools[:, ids]),   # repro: allow-host-sync(the synchronous page gather of pooled suspends; prefix demotions route around it under async_swap)
+        return {"k": np.asarray(self.k_pools[:, ids]),   # repro: allow-host-sync(the synchronous page gather async_swap=False selects; pooled suspends, tail sheds and prefix demotions all route around it under async_swap)
                 "v": np.asarray(self.v_pools[:, ids])}   # repro: allow-host-sync(same sync gather as the k plane above)
+
+    def _gather_pages_device(self, page_ids) -> Dict[str, jnp.ndarray]:
+        """Async page snapshot: gather the pages into FRESH device
+        buffers (immutable — later pool writes, and even freeing the
+        source pages, cannot alias them) and start the D2H copy
+        immediately; the host bytes land at a drain boundary
+        (``_drain_runs``).  This is what lets ``_shed_tail`` free the
+        gathered pages in the same step without waiting on the host
+        link."""
+        ids = jnp.asarray(np.asarray(page_ids, np.int32))
+        kv = {"k": self.k_pools[:, ids], "v": self.v_pools[:, ids]}
+        kv["k"].copy_to_host_async()
+        kv["v"].copy_to_host_async()
+        return kv
+
+    def _drain_runs(self, rid: Optional[int] = None,
+                    before_step: Optional[int] = None) -> None:
+        """Finalize in-flight pooled page-run snapshots — the paged
+        plane's analogue of ``_drain_swaps``: block on the
+        already-started D2H copy, replace the entry's device leaves
+        with host arrays, CRC-seal (+ apply any pending corruption
+        marker)."""
+        if rid is not None:
+            keys = [k for k in self._pending_runs if k[0] == rid]
+        elif before_step is not None:
+            keys = [k for k, (_, s) in self._pending_runs.items()
+                    if s < before_step]
+        else:
+            keys = list(self._pending_runs)
+        for k in keys:
+            entry, _ = self._pending_runs.pop(k)
+            t0 = time.perf_counter()
+            entry.kv = jax.device_get(entry.kv)  # repro: allow-host-sync(async page-run drain boundary - blocks only on a D2H copy started at suspend time and overlapped with later compute)
+            self._finalize_entry(entry)
+            self.swap_stats["wall_out_s"] += time.perf_counter() - t0
+
+    def _purge_pending_runs(self, rid: int) -> None:
+        """Forget in-flight snapshots of runs the store no longer holds
+        (full-store unwind, recompute discard, post-rollback repair):
+        their entries were already popped, so draining them would
+        finalize dangling objects and misattribute wall time."""
+        for k in [k for k in self._pending_runs if k[0] == rid]:
+            del self._pending_runs[k]
 
     def _restore_pages(self, page_ids, kv) -> None:
         ids = jnp.asarray(np.asarray(page_ids, np.int32))
@@ -806,9 +1033,11 @@ class Engine:
         False when the store is full — the victim (and any stored tail
         runs) falls back to discard-and-recompute.
 
-        Pooled suspend snapshots are SYNCHRONOUS device_get copies —
-        ``async_swap`` double-buffering covers the slot planes'
-        whole-slot snapshots and the prefix tier's page demotions."""
+        With ``async_swap`` the snapshot is a device-side page gather
+        (fresh immutable buffers, so the freed pages can be reused this
+        very step) whose host copy is started here and finalized at a
+        drain boundary; capacity is charged from shape metadata before
+        the gather, so the full-store fallback stays synchronous."""
         t0 = time.perf_counter()
         tbl = self.allocator.table(victim.rid)
         device_tokens = tbl.num_tokens
@@ -817,13 +1046,23 @@ class Engine:
         fkey = (victim.rid, victim.suspended_m, victim.swaps)
         try:
             self._check_run_capacity(len(tbl.pages))  # before the D2H copy
-            entry = self._guarded_put(
-                "store_put", fkey,
-                lambda: self.swap_store.put_run(
-                    victim.rid, start=0, num_tokens=device_tokens,
-                    kv=self._snapshot_pages(tbl.pages)))
-            entry.corrupt = self._corrupt_draw("corrupt_put", fkey)
-            self._finalize_entry(entry)   # pooled suspends are sync
+            if self.ecfg.async_swap:
+                kv = self._gather_pages_device(tbl.pages)
+                entry = self._guarded_put(
+                    "store_put", fkey,
+                    lambda: self.swap_store.put_run(
+                        victim.rid, start=0, num_tokens=device_tokens,
+                        kv=kv, nbytes=kv["k"].nbytes + kv["v"].nbytes))
+                entry.corrupt = self._corrupt_draw("corrupt_put", fkey)
+                self._pending_runs[(victim.rid, 0)] = (entry, self._step_no)
+            else:
+                entry = self._guarded_put(
+                    "store_put", fkey,
+                    lambda: self.swap_store.put_run(
+                        victim.rid, start=0, num_tokens=device_tokens,
+                        kv=self._snapshot_pages(tbl.pages)))
+                entry.corrupt = self._corrupt_draw("corrupt_put", fkey)
+                self._finalize_entry(entry)
         except SwapStoreFullError:
             # stored tail runs are unrestorable without the device
             # portion: unwind their swap counts along with this one
@@ -832,6 +1071,7 @@ class Engine:
                     victim.swaps -= 1
                     self.sched.num_swaps -= 1
                     self.swap_stats["swap_fallbacks"] += 1
+            self._purge_pending_runs(victim.rid)
             victim.drop_suspended()
             self.sched.num_swaps -= 1   # the suspend did not stick
             self.swap_stats["swap_fallbacks"] += 1
@@ -841,6 +1081,10 @@ class Engine:
         self.swap_stats["kv_out"] += device_tokens
         self.swap_stats["wall_out_s"] += time.perf_counter() - t0
         self._release(victim.rid)
+        # double buffering, as in _swap_out: finalize the oldest
+        # transfer(s) outside the timed enqueue window above
+        while len(self._pending_runs) > 2:
+            self._drain_runs(rid=next(iter(self._pending_runs))[0])
         return True
 
     def _shed_tail(self, r: Request, npages: int, n_tokens: int,
@@ -860,13 +1104,27 @@ class Engine:
             fkey = (r.rid, r.m, n_tokens, r.partial_preemptions)
             try:
                 self._check_run_capacity(npages)   # before the D2H copy
-                entry = self._guarded_put(
-                    "store_run", fkey,
-                    lambda: self.swap_store.put_run(
-                        r.rid, start=start, num_tokens=n_tokens,
-                        kv=self._snapshot_pages(tbl.pages[-npages:])))
-                entry.corrupt = self._corrupt_draw("corrupt_run", fkey)
-                self._finalize_entry(entry)   # tail sheds are sync
+                if self.ecfg.async_swap:
+                    # the gather's fresh buffers are what make the
+                    # free_tail below safe in the same step
+                    kv = self._gather_pages_device(tbl.pages[-npages:])
+                    entry = self._guarded_put(
+                        "store_run", fkey,
+                        lambda: self.swap_store.put_run(
+                            r.rid, start=start, num_tokens=n_tokens,
+                            kv=kv,
+                            nbytes=kv["k"].nbytes + kv["v"].nbytes))
+                    entry.corrupt = self._corrupt_draw("corrupt_run", fkey)
+                    self._pending_runs[(r.rid, start)] = \
+                        (entry, self._step_no)
+                else:
+                    entry = self._guarded_put(
+                        "store_run", fkey,
+                        lambda: self.swap_store.put_run(
+                            r.rid, start=start, num_tokens=n_tokens,
+                            kv=self._snapshot_pages(tbl.pages[-npages:])))
+                    entry.corrupt = self._corrupt_draw("corrupt_run", fkey)
+                    self._finalize_entry(entry)
                 swapped = True
                 self.swap_stats["swap_outs"] += 1
                 self.swap_stats["kv_out"] += n_tokens
@@ -884,9 +1142,13 @@ class Engine:
                         r.drop_tail_run(run.num_tokens)
                         self.sched.num_swaps -= 1
                         self.swap_stats["swap_fallbacks"] += 1
+                self._purge_pending_runs(r.rid)
         removed = self.allocator.free_tail(r.rid, npages)
         if self.ecfg.check_invariants:
             assert removed == n_tokens, (r.rid, removed, n_tokens)
+        if swapped:
+            while len(self._pending_runs) > 2:
+                self._drain_runs(rid=next(iter(self._pending_runs))[0])
         return swapped
 
     def _swap_in_paged(self, r: Request) -> None:
@@ -901,6 +1163,12 @@ class Engine:
         self._restore_runs(r, claim=False, resume=r.resume_tail)
 
     def _restore_runs(self, r: Request, *, claim: bool, resume) -> None:
+        if any(k[0] == r.rid for k in self._pending_runs):
+            # re-admitted within the drain window: finalize on demand —
+            # BEFORE the verify below, which is trivially true (crc
+            # None) on an undrained entry
+            self.swap_stats["drains_on_swapin"] += 1
+            self._drain_runs(rid=r.rid)
         if not all(verify_entry(run)
                    for run in self.swap_store.peek_runs(r.rid)):
             # rung 3: one rotten stripe poisons the whole tiling —
@@ -942,9 +1210,15 @@ class Engine:
 
     def _page_tokens(self, r: Request, n: int) -> List[Tuple[int, ...]]:
         """Token ids of the first n full prompt pages (the registry's
-        collision-verification payload)."""
-        pg = self.ecfg.page_size
-        return [tuple(r.prompt[i * pg:(i + 1) * pg]) for i in range(n)]
+        collision-verification payload), memoized per rid like
+        ``_page_keys`` — the attach and every later registration
+        re-derive the same leading pages."""
+        toks = self._page_tokens_of.get(r.rid)
+        if toks is None or len(toks) < n:
+            pg = self.ecfg.page_size
+            toks = [tuple(r.prompt[i * pg:(i + 1) * pg]) for i in range(n)]
+            self._page_tokens_of[r.rid] = toks
+        return toks[:n]
 
     def _demote_prefix(self, key: int, page: int, tokens, n_kvs: int
                        ) -> None:
@@ -1079,15 +1353,37 @@ class Engine:
     def _block_tables_device(self) -> jnp.ndarray:
         """Device-side (nslots, max_pages) block tables, cached against
         the allocator's mutation version — decode steps that allocated
-        nothing new (in-page appends) skip the host rebuild + upload."""
+        nothing new (in-page appends) skip the refresh entirely.  On a
+        version bump only the rows of rids whose page list actually
+        changed (``consume_dirty``) are rewritten in the persistent
+        host mirror, then the whole mirror ships in ONE upload: a
+        thousand-slot step that grew one table touches one row."""
         v = self.allocator.version
-        if self._bt_cache is None or self._bt_cache[0] != v:
-            bt = np.zeros((self.ecfg.nslots, self.max_pages), np.int32)
-            for rid, slot in self.slot_of.items():
-                if self.allocator.has(rid):
-                    pages = self.allocator.table(rid).pages
-                    bt[slot, :len(pages)] = pages
-            self._bt_cache = (v, jnp.asarray(bt))
+        if self._bt_cache is not None and self._bt_cache[0] == v:
+            return self._bt_cache[1]
+        t0 = time.perf_counter()
+        if self._bt_host is None:
+            self._bt_host = np.zeros((self.ecfg.nslots, self.max_pages),
+                                     np.int32)
+            self.allocator.consume_dirty()
+            dirty = set(self.slot_of)          # first build: all rows
+        else:
+            dirty = self.allocator.consume_dirty()
+        for rid in dirty:
+            slot = self.slot_of.get(rid)
+            if slot is None:
+                continue     # freed rid: _release already zeroed its row
+            row = self._bt_host[slot]
+            row[:] = 0
+            if self.allocator.has(rid):
+                pages = self.allocator.table(rid).pages
+                row[:len(pages)] = pages
+        # the np.array COPY is load-bearing: on CPU jnp.asarray may
+        # alias the numpy buffer zero-copy, and later in-place edits of
+        # the mirror would corrupt device tables still referenced by
+        # step-txn snapshots
+        self._bt_cache = (v, jnp.asarray(np.array(self._bt_host)))
+        self.phase_stats["upload_s"] += time.perf_counter() - t0
         return self._bt_cache[1]
 
     def _swap_time(self, n_kvs: int) -> float:
@@ -1185,9 +1481,16 @@ class Engine:
         block_tables = self._block_tables_device()
 
         def step(toks, lens, starts):
+            # one coalesced upload per round — [toks | lens | starts]
+            # ride a single (nslots, bucket+2) grid, unpacked on device
+            # inside the jitted step (see _make_paged_step_fns)
+            t0 = time.perf_counter()
+            grid = jnp.asarray(np.concatenate(
+                [toks, lens[:, None], starts[:, None]], axis=1))
+            self.phase_stats["upload_s"] += time.perf_counter() - t0
             tok_ids, self.k_pools, self.v_pools = self._paged_prefill(
-                self.params, self.k_pools, self.v_pools, jnp.asarray(toks),
-                jnp.asarray(starts), jnp.asarray(lens), block_tables)
+                self.params, self.k_pools, self.v_pools, grid,
+                block_tables)
             return tok_ids
 
         return self._run_prefill_rounds(plans, emits, step)
@@ -1195,20 +1498,51 @@ class Engine:
     def _run_decodes_paged(self, decode_items) -> np.ndarray:
         """One fused decode step over all slots against the pooled KV:
         scatter the new token's K/V through the block table, then
-        flash-decode over scalar-prefetched pages."""
+        flash-decode over scalar-prefetched pages.
+
+        Steady-state decode uploads NOTHING: the inputs of step N+1 are
+        step N's own device outputs — last step's argmax ids ARE this
+        step's tokens, and ctx advances by the (cached) active mask —
+        so a stable cohort runs entirely device-resident.  The cohort
+        key is (rid, slot, m, len(token_ids)) per row: any admission,
+        finish, preemption, swap-in, or recompute-refill (the ntoks
+        term — a refill re-emits and appends, so (rid, slot, m) alone
+        could match a stale token buffer) perturbs it and forces one
+        packed re-upload.  Non-cohort rows carry garbage on a hit,
+        harmlessly: inactive scatters route out of bounds and their
+        outputs are never read."""
         nslots = self.ecfg.nslots
-        toks = np.zeros((nslots,), np.int32)
-        ctx = np.zeros((nslots,), np.int32)
-        active = np.zeros((nslots,), bool)
-        for r, _ in decode_items:
-            slot = self.slot_of[r.rid]
-            toks[slot] = self.token_ids[r.rid][-1]
-            ctx[slot] = r.m
-            active[slot] = True
+        key = tuple(sorted(
+            (r.rid, self.slot_of[r.rid], r.m, len(self.token_ids[r.rid]))
+            for r, _ in decode_items))
+        st = self._decode_state
+        t0 = time.perf_counter()
+        if st is not None and st["key"] == key:
+            toks_dev, ctx_dev = st["toks"], st["ctx"]
+            active_dev, ones = st["active"], st["ones"]
+        else:
+            toks = np.zeros((nslots,), np.int32)
+            ctx = np.zeros((nslots,), np.int32)
+            active = np.zeros((nslots,), bool)
+            for r, _ in decode_items:
+                slot = self.slot_of[r.rid]
+                toks[slot] = self.token_ids[r.rid][-1]
+                ctx[slot] = r.m
+                active[slot] = True
+            packed = jnp.asarray(np.stack([toks, ctx]))  # ONE i32 upload
+            toks_dev, ctx_dev = packed[0], packed[1]
+            active_dev = jnp.asarray(active)
+            ones = active_dev.astype(jnp.int32)
+        self.phase_stats["upload_s"] += time.perf_counter() - t0
         tok_ids, self.k_pools, self.v_pools = self._paged_decode(
-            self.params, self.k_pools, self.v_pools, jnp.asarray(toks),
-            jnp.asarray(ctx), self._block_tables_device(),
-            jnp.asarray(active))
+            self.params, self.k_pools, self.v_pools, toks_dev,
+            ctx_dev, self._block_tables_device(), active_dev)
+        nxt = tuple(sorted(
+            (r.rid, self.slot_of[r.rid], r.m + 1,
+             len(self.token_ids[r.rid]) + 1) for r, _ in decode_items))
+        self._decode_state = {"key": nxt, "toks": tok_ids,
+                              "ctx": ctx_dev + ones,
+                              "active": active_dev, "ones": ones}
         return np.asarray(tok_ids)  # repro: allow-host-sync(per-step sampled-token fetch - ids must reach the host to extend prompts and detect EOS; (nslots,) int32 only)
 
     # ------------------------------------------------------------------ #
@@ -1280,10 +1614,16 @@ class Engine:
         token_ids = {k: list(v) for k, v in self.token_ids.items()}
         outputs = {k: list(v) for k, v in self.outputs.items()}
         page_keys = dict(self._page_keys_of)
+        page_tokens = dict(self._page_tokens_of)
         skip = dict(self._prefix_skip)
         bt_cache = self._bt_cache
+        # deep copy: the delta rebuild mutates the mirror in place
+        bt_host = np.array(self._bt_host) \
+            if self._bt_host is not None else None
+        decode_state = self._decode_state   # replaced wholesale per step
         pending = OrderedDict(self._pending_swaps)
         demotes = OrderedDict(self._pending_demotes)
+        runs = OrderedDict(self._pending_runs)
         scalars = (self._tier_swap_s, self._carry_swap_s,
                    self._carry_out, self.now)
         stats = dict(self.swap_stats)
@@ -1297,10 +1637,14 @@ class Engine:
             self.token_ids = {k: list(v) for k, v in token_ids.items()}
             self.outputs = {k: list(v) for k, v in outputs.items()}
             self._page_keys_of = dict(page_keys)
+            self._page_tokens_of = dict(page_tokens)
             self._prefix_skip = dict(skip)
             self._bt_cache = bt_cache
+            self._bt_host = bt_host
+            self._decode_state = decode_state
             self._pending_swaps = OrderedDict(pending)
             self._pending_demotes = OrderedDict(demotes)
+            self._pending_runs = OrderedDict(runs)
             (self._tier_swap_s, self._carry_swap_s,
              self._carry_out, self.now) = scalars
             self.swap_stats = dict(stats)
@@ -1335,6 +1679,7 @@ class Engine:
         else:
             if self._pooled:
                 self.swap_store.discard_runs(victim.rid)
+                self._purge_pending_runs(victim.rid)
             self._release(victim.rid)
         return 0.0, 0
 
@@ -1417,6 +1762,7 @@ class Engine:
         # any allocation (or CoW remap) may reclaim-and-DEMOTE registry
         # entries — those host-link swap_time charges belong to THIS
         # batch's virtual time, mirroring the simulator shadow
+        t_attach = time.perf_counter()
         for r, c in prefill_items:
             if r.rid not in self.slot_of:
                 self._claim_slot(r.rid, reset=not self._pooled)
@@ -1429,6 +1775,7 @@ class Engine:
             self.allocator.allocate(r.rid, c - skip)
             if self._pooled:
                 self._cow_guard(r.rid, r.m + skip)
+        self.phase_stats["attach_s"] += time.perf_counter() - t_attach
         for r, _ in decode_items:
             self.allocator.allocate(r.rid, 1)
             if self._pooled:
@@ -1447,7 +1794,9 @@ class Engine:
                       "paged": (self._run_prefills_paged if self._pooled
                                 else self._run_prefills_batched)}[
                                     self.ecfg.plane]
+            t_pf = time.perf_counter()
             final_tok = runner(prefill_items)
+            self.phase_stats["prefill_s"] += time.perf_counter() - t_pf
             for r, c in prefill_items:
                 m_new = r.m + c
                 generated = r.advance(c, self.now)
@@ -1556,6 +1905,7 @@ class Engine:
         if self.ecfg.check_invariants:
             assert not self._pending_swaps
             assert not self._pending_demotes
+            assert not self._pending_runs
             assert len(self.swap_store) == 0, \
                 f"swap store leaked rids {self.swap_store.suspended_rids}"
         sim = SimResult(requests=list(requests), batches=self.batch_logs,
@@ -1566,7 +1916,8 @@ class Engine:
                             wall_time=self.wall,
                             swap_stats=dict(self.swap_stats),
                             num_compiles=self.num_compiles,
-                            recovery_stats=dict(self.recovery_stats))
+                            recovery_stats=dict(self.recovery_stats),
+                            phase_stats=dict(self.phase_stats))
 
 
 @dataclass
@@ -1577,6 +1928,9 @@ class EngineResult:
     swap_stats: Dict[str, float] = field(default_factory=dict)
     num_compiles: int = 0
     recovery_stats: Dict[str, float] = field(default_factory=dict)
+    # wall-clock attribution of the pooled step (attach_s / prefill_s /
+    # upload_s) — the fig_prefix_sharing phase columns
+    phase_stats: Dict[str, float] = field(default_factory=dict)
 
 
 # --------------------------------------------------------------------- #

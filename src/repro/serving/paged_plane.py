@@ -8,11 +8,14 @@ pages are named by the ``PagedAllocator`` block table, threaded in as a
 ladder with a per-row ``lengths`` mask), so the paged plane keeps the
 batched plane's constant-compile-count property.
 
-* ``prefill``: the chunk's K/V are projected, attention runs over
-  [gathered own pages ++ the chunk itself] with the usual causal mask,
-  and the chunk K/V rows are scattered THROUGH the block table into the
-  pools (padded rows route out of bounds and drop — pool bytes of other
-  requests are untouchable by construction).
+* ``prefill``: the chunk's K/V are projected, then ONE fused op —
+  ``kernels.paged_attention.ops.paged_prefill`` — writes the chunk's
+  rows through the block table into the pools (padded rows route out of
+  bounds and drop — pool bytes of other requests are untouchable by
+  construction) and attends causally over [own pages ++ the chunk].
+  On TPU that is the Pallas gather-write-attend kernel streaming owned
+  pages through a flash reduction; on CPU a jnp gather oracle with the
+  dense plane's exact reduction order (bit parity preserved).
 * ``decode``: the new token's K/V row is scattered into its page, then
   attention runs via ``kernels.paged_attention.ops.paged_decode`` — the
   Pallas flash-decoding kernel over scalar-prefetched block tables on
@@ -28,12 +31,14 @@ page-level partial preemption, refcounted shared-prefix pages, and the
 prefix cache's host demotion tier possible upstream: a demoted registry
 page is snapshotted straight out of these pools before eviction and
 scattered back into a freshly promoted page on the next registry hit
-(the engine's ``_snapshot_pages`` / ``_restore_pages`` on pool slices).  The decode path reads pages in place (the Pallas
-kernel DMAs exactly the owned pages); the chunked-prefill path does
-still gather a TRANSIENT per-row ``(B, max_pages*page, Hkv, D)`` view
-for its attention (same activation footprint as the dense plane's slot
-buffers, freed at step end) — size ``num_pages`` for the pools'
-persistent bytes, plus one slot-grid's worth of prefill transients.
+(the engine's ``_snapshot_pages`` / ``_restore_pages`` on pool slices).
+Both paths read/write pages in place on TPU (the Pallas kernels DMA
+exactly the owned pages; prefill updates pools via
+``input_output_aliases``), so device residency is ``num_pages`` for the
+pools' persistent bytes plus chunk-sized activations — the old
+per-bucket ``(B, max_pages*page, Hkv, D)`` gather transient is gone
+from the kernel path (the CPU oracle still materializes it; parity
+matters more than speed off-accelerator).
 """
 from __future__ import annotations
 
@@ -44,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.paged_attention import ops as pa_ops
+from repro.kernels.paged_attention.ref import scatter_rows as _scatter_rows
 from repro.models import attention as attn
 from repro.models import model as M
 from repro.models.common import rms_norm
@@ -56,17 +62,6 @@ def paged_supported(cfg: ModelConfig) -> bool:
             and cfg.family not in ("ssm", "hybrid"))
 
 
-def _scatter_rows(pool: jnp.ndarray, dest: jnp.ndarray,
-                  rows: jnp.ndarray) -> jnp.ndarray:
-    """Write rows into a (P, page, Hkv, D) pool at flat token positions
-    ``dest`` (OOB = drop).  rows (..., Hkv, D); dest (...,) int32."""
-    P, pg, Hkv, D = pool.shape
-    flat = pool.reshape(P * pg, Hkv, D)
-    flat = flat.at[dest.reshape(-1)].set(
-        rows.reshape(-1, Hkv, D), mode="drop")
-    return flat.reshape(P, pg, Hkv, D)
-
-
 def _attn_paged_chunk(lp: Any, cfg: ModelConfig, h: jnp.ndarray,
                       k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                       starts: jnp.ndarray, lengths: jnp.ndarray,
@@ -76,35 +71,12 @@ def _attn_paged_chunk(lp: Any, cfg: ModelConfig, h: jnp.ndarray,
     (P, page, Hkv, D); starts/lengths (B,); block_tables (B, maxp).
     Returns (attn out (B, c, q_dim-projected), new pools)."""
     B, c, _ = h.shape
-    P, pg = k_pool.shape[0], k_pool.shape[1]
-    maxp = block_tables.shape[1]
-    Smax = maxp * pg
     positions = starts[:, None] + jnp.arange(c)[None, :]        # (B, c)
-    valid = jnp.arange(c)[None, :] < lengths[:, None]           # (B, c)
     q, k, v = attn._project_qkv(lp, cfg, h, positions)
-
-    # gather the request's own pages into a per-row logical view: table
-    # slot j covers absolute positions [j*pg, (j+1)*pg), so the gathered
-    # row IS position order — then write the chunk in place and attend
-    # causally, exactly the dense plane's write-then-attend (same buffer
-    # width and reduction order, so the math matches bit-for-bit; stale
-    # rows beyond each query's position never enter the mask)
-    kg = k_pool[block_tables].reshape(B, Smax, *k_pool.shape[2:])
-    vg = v_pool[block_tables].reshape(B, Smax, *v_pool.shape[2:])
-    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, c))
-    loc = jnp.where(valid, positions, Smax)                     # OOB drop
-    kg = kg.at[rows, loc].set(k, mode="drop")
-    vg = vg.at[rows, loc].set(v, mode="drop")
-    sidx = jnp.arange(Smax)[None, None, :]                      # (1,1,Smax)
-    mask = sidx <= positions[:, :, None]                        # causal
-    out = attn._sdpa(q, kg, vg, mask)
+    out, new_k, new_v = pa_ops.paged_prefill(
+        q, k, v, k_pool, v_pool, block_tables, starts, lengths)
     out = out.reshape(B, c, cfg.q_dim) @ lp["wo"]
-
-    # scatter the chunk's K/V through the block table; padded rows drop
-    page_idx = jnp.take_along_axis(
-        block_tables, jnp.clip(positions // pg, 0, maxp - 1), axis=1)
-    dest = jnp.where(valid, page_idx * pg + positions % pg, P * pg)
-    return out, _scatter_rows(k_pool, dest, k), _scatter_rows(v_pool, dest, v)
+    return out, new_k, new_v
 
 
 def _attn_paged_decode(lp: Any, cfg: ModelConfig, h: jnp.ndarray,
@@ -143,9 +115,9 @@ def build_paged_fns(cfg: ModelConfig, *, impl: str = "reference",
         -> (greedy ids (B,), new_k_pools, new_v_pools)
 
     Pools are stacked over layers: (L, P, page, Hkv, D).  Sampling is
-    fused (argmax over the real vocabulary on device); the prefill
-    gathered attention uses the reference SDPA (``impl`` selects only
-    the decode backend via ``ops.paged_decode``'s dispatch).
+    fused (argmax over the real vocabulary on device); ``impl`` selects
+    only the decode backend via ``ops.paged_decode``'s dispatch — the
+    prefill backend is chosen by ``ops.paged_prefill`` itself.
     """
     if not paged_supported(cfg):
         raise ValueError("paged pools need unbounded dense attention, "

@@ -256,14 +256,18 @@ class KVSwapStore:
 
     # --- page-granular runs (partial preemption, §8) ------------------- #
     def put_run(self, rid: int, start: int, num_tokens: int,
-                kv: Any) -> PageRunEntry:
+                kv: Any, nbytes: int = 0) -> PageRunEntry:
         """Suspend one contiguous run of rid's KV pages.  Runs stack:
         later runs sit BELOW earlier ones (the tail is shed top-down), so
-        entries for a rid always tile a suffix of its context."""
+        entries for a rid always tile a suffix of its context.
+
+        ``nbytes`` mirrors ``put``: the async page-run path hands over a
+        device-side gather whose D2H copy is still in flight and charges
+        capacity from array metadata; the entry is finalized at drain."""
         if num_tokens <= 0:
             raise ValueError(f"rid {rid}: num_tokens={num_tokens}")
         entry = PageRunEntry(rid=rid, start=start, num_tokens=num_tokens,
-                             kv=kv)
+                             kv=kv, nbytes=nbytes)
         if (self.capacity_bytes is not None
                 and self._nbytes + entry.nbytes > self.capacity_bytes):
             raise SwapStoreFullError(

@@ -88,6 +88,7 @@ def snapshot_allocator(alloc: PagedAllocator) -> Callable[[], None]:
     refs = dict(alloc._refs)
     pinned = set(alloc._pinned)
     now, version = alloc.now, alloc.version
+    dirty = set(alloc.dirty)
     stats = dict(alloc.stats)
     pc = alloc.prefix_cache
     pc_map = pc._map.copy()
@@ -100,6 +101,7 @@ def snapshot_allocator(alloc: PagedAllocator) -> Callable[[], None]:
         alloc._refs = dict(refs)
         alloc._pinned = set(pinned)
         alloc.now, alloc.version = now, version
+        alloc.dirty = set(dirty)
         alloc.stats = dict(stats)
         pc._map = pc_map.copy()
         restore_state(pc.policy, {k: _copy_val(v)
