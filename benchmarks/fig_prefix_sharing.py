@@ -58,6 +58,7 @@ def _run(cfg, params, cm, reqs, *, sharing):
                 peak_pages=max(b.pages_used for b in res.metrics.batches),
                 prefix_hits=eng.allocator.stats["prefix_hits"],
                 shared_tokens=eng.allocator.stats["prefix_shared_tokens"],
+                preemptions=res.metrics.num_preemptions,
                 **{k: round(v, 6) for k, v in res.phase_stats.items()})
 
 
@@ -115,9 +116,13 @@ def run(smoke: bool = False) -> dict:
     assert hi["shared"]["peak_pages"] < hi["unshared"]["peak_pages"], hi
     assert hi["shared"]["prefix_hits"] >= n - 1, hi
     assert hi["shared"]["wall_s"] < hi["unshared"]["wall_s"], hi
-    # no duplicate prefix -> no hits, no artificial savings
+    # no duplicate prefix -> no CROSS-request sharing.  The radix trie
+    # (PR 9) can still legitimately re-attach a recompute-preempted
+    # request's own surviving cached run — a partial hit the old
+    # exact-match registry missed — so hits at frac 0 are bounded by
+    # preemption churn, not zero.
     lo = payload["frac_0.0"]
-    assert lo["shared"]["prefix_hits"] == 0
+    assert lo["shared"]["prefix_hits"] <= lo["shared"]["preemptions"]
     print("tokens identical with sharing on/off: True")
     payload["shared_vs_unshared_tps_ratio"] = (hi["shared"]["tps"] /
                                                hi["unshared"]["tps"])

@@ -1,0 +1,130 @@
+"""Radix-trie vs exact-match prefix registry (PR 9).
+
+The PR 8 registry was all-or-nothing: a probe attached cached pages
+only when the FULL queried chain was device-resident, so branching
+conversations — shared system prompt, divergent turns, a unique final
+user message per request — scored near zero even though most of every
+prompt was sitting in the pool.  The radix trie converts each shared
+tree path into a *partial* hit: the longest cached run attaches and
+only the divergent tail computes.
+
+This benchmark runs the SAME engine twice per workload — once with
+``prefix_lookup="trie"`` (default) and once with the ``"exact"``
+ablation — on two workloads:
+
+  * ``conversation_tree`` — the tentpole's exit-criterion shape: every
+    prompt ends in a unique page, so exact matching can only attach up
+    to the probe cap while the trie attaches every shared tree path
+  * ``zipf_shared_prefix`` — the §6 replacement workload, checking the
+    trie never regresses the hot-template traffic the break-even
+    policy was tuned on
+
+Asserted claims: token-identical outputs per workload across modes
+(partial attach must never change a single token), strictly MORE
+shared tokens and strictly lower wall time for the trie on
+``conversation_tree``.  The headline ratio
+``trie_vs_exact_shared_tokens_ratio`` feeds BENCH_9.json and the
+scripts/check.sh gate (> 1.0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import print_table, save_json
+
+
+def _run(cfg, params, cm, reqs, *, mode):
+    from repro.core import make_scheduler
+    from repro.serving import Engine, EngineConfig
+
+    sched = make_scheduler("vllm", 400, S=512, replacement="srf",
+                           prefix_lookup=mode)
+    eng = Engine(cfg, params, sched,
+                 EngineConfig(nslots=8, cache_len=64, chunk=16,
+                              plane="paged", page_size=8,
+                              prefix_sharing=True, share_jits=True),
+                 cost_model=cm)
+    eng.warmup()                   # compiles land OUTSIDE the timed window
+    t0 = time.perf_counter()
+    res = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    toks = sum(len(v) for v in res.outputs.values())
+    return dict(outputs=res.outputs, wall_s=wall, tokens=toks,
+                tps=toks / wall,
+                peak_pages=max(b.pages_used for b in res.metrics.batches),
+                prefix_hits=eng.allocator.stats["prefix_hits"],
+                shared_tokens=eng.allocator.stats["prefix_shared_tokens"],
+                trie_hits=res.swap_stats["trie_hits"],
+                partial_hit_tokens=res.swap_stats["partial_hit_tokens"])
+
+
+def run(smoke: bool = False) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import TheoreticalCostModel, get_hardware
+    from repro.data.workloads import conversation_tree, zipf_shared_prefix
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cm = TheoreticalCostModel(cfg, get_hardware("tpu_v5e"))
+
+    n = 8 if smoke else 16
+    workloads = {
+        # 48-token prompts, 6 pages each: 3 system + 2 turn + 1 unique
+        "conversation_tree": lambda: conversation_tree(
+            n=n, page_size=8, system_pages=3, turn_pages=1, branching=2,
+            depth=2, output_len=4, vocab=cfg.vocab_size, seed=0),
+        "zipf_shared_prefix": lambda: zipf_shared_prefix(
+            n=max(n, 12), num_groups=4, page_size=8, input_len=48,
+            output_len=4, vocab=cfg.vocab_size, seed=1),
+    }
+    rows, payload = [], {}
+    for name, make_wl in workloads.items():
+        point = {}
+        for mode in ("exact", "trie"):
+            point[mode] = _run(cfg, params, cm, make_wl(), mode=mode)
+        ex, tr = point["exact"], point["trie"]
+        assert tr["outputs"] == ex["outputs"], \
+            f"{name}: partial-prefix attach changed tokens"
+        rows.append([name,
+                     ex["shared_tokens"], tr["shared_tokens"],
+                     tr["partial_hit_tokens"],
+                     f"{ex['tps']:.1f}", f"{tr['tps']:.1f}",
+                     ex["peak_pages"], tr["peak_pages"],
+                     ex["trie_hits"], tr["trie_hits"]])
+        payload[name] = {
+            m: {k: v for k, v in point[m].items() if k != "outputs"}
+            for m in point}
+    print_table(
+        f"fig_radix_trie — exact vs radix-trie prefix lookup "
+        f"(paged plane, page_size=8, {n} conversation requests)",
+        ["workload", "shared (exact)", "shared (trie)", "partial toks",
+         "tok/s (exact)", "tok/s (trie)", "pages (exact)",
+         "pages (trie)", "hits (exact)", "hits (trie)"], rows)
+
+    conv = payload["conversation_tree"]
+    # the exit criterion: on branching conversations the trie attaches
+    # strictly more shared tokens AND finishes strictly faster — the
+    # extra attached pages skip their prefill rounds outright
+    assert conv["trie"]["shared_tokens"] > conv["exact"]["shared_tokens"], conv
+    assert conv["trie"]["partial_hit_tokens"] > 0, conv
+    assert conv["trie"]["wall_s"] < conv["exact"]["wall_s"], conv
+    # the zipf replacement workload must not regress under the trie
+    zipf = payload["zipf_shared_prefix"]
+    assert zipf["trie"]["shared_tokens"] >= zipf["exact"]["shared_tokens"], zipf
+    print("tokens identical across lookup modes: True")
+    payload["trie_vs_exact_shared_tokens_ratio"] = (
+        conv["trie"]["shared_tokens"]
+        / max(conv["exact"]["shared_tokens"], 1))
+    payload["trie_vs_exact_tps_ratio"] = (conv["trie"]["tps"]
+                                          / conv["exact"]["tps"])
+    save_json("fig_radix_trie", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -24,7 +24,7 @@ from benchmarks import (appa_low_contention, appb_engine_validation,  # noqa: E4
                         fig12_vary_m, fig13_csp, fig14_srf,
                         fig_cache_replacement, fig_engine_wall,
                         fig_fault_recovery, fig_prefix_sharing,
-                        five_minute_rule, roofline_table)
+                        fig_radix_trie, five_minute_rule, roofline_table)
 
 # (name, module, smoke-mode kwargs).  Modules without a size knob are
 # already tiny/analytical and run unchanged in smoke mode.
@@ -42,6 +42,8 @@ MODULES = [
     ("App B  engine-vs-sim validation", appb_engine_validation, {}),
     ("$Perf  engine wall-time planes", fig_engine_wall, {"smoke": True}),
     ("$Perf  shared-prefix page reuse", fig_prefix_sharing, {"smoke": True}),
+    ("$Trie  radix vs exact prefix lookup", fig_radix_trie,
+     {"smoke": True}),
     ("$6/§8  cache replacement + demotion", fig_cache_replacement,
      {"smoke": True}),
     ("App C  heterogeneous ranking", appc_ranking, {"W": 96}),
@@ -121,6 +123,23 @@ def main(argv=None) -> int:
         with open("BENCH_8.json", "w") as f:
             json.dump(bench8, f, indent=1)
         print("BENCH_8.json:", bench8)
+    trie = payloads.get("benchmarks.fig_radix_trie")
+    if args.smoke and trie:
+        # repo-root trie headline (PR 9): what partial-prefix matching
+        # buys over exact-match lookup on branching conversations —
+        # check.sh gates on the shared-tokens ratio
+        import json
+        bench9 = {
+            "trie_vs_exact_shared_tokens_ratio":
+                round(trie["trie_vs_exact_shared_tokens_ratio"], 4),
+            "trie_vs_exact_tps_ratio":
+                round(trie["trie_vs_exact_tps_ratio"], 4),
+            "conversation_tree_partial_hit_tokens":
+                trie["conversation_tree"]["trie"]["partial_hit_tokens"],
+        }
+        with open("BENCH_9.json", "w") as f:
+            json.dump(bench9, f, indent=1)
+        print("BENCH_9.json:", bench9)
     if failures:
         print("failed:", ", ".join(failures))
         return 1

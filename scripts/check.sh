@@ -13,6 +13,9 @@
 #      and the repo-root BENCH_8.json perf headline
 #   4. perf gate — the paged plane must match or beat the batched dense
 #      plane on wall-clock tok/s (BENCH_8.json ratio >= 1.0)
+#   5. trie gate — radix-trie partial-prefix lookup must attach strictly
+#      more shared tokens than exact-match lookup on the branching
+#      conversation workload (BENCH_9.json ratio > 1.0)
 # Set CHECK_CHAOS=1 to additionally run the complete fault-injection
 # chaos matrix (tests/test_chaos.py including its `slow` sweeps); the
 # fast tier already covers the unmarked chaos smoke tests.
@@ -55,5 +58,19 @@ print(f"paged/batched tok/s ratio: {r:.2f}  "
       f"(shared/unshared: {d['shared_vs_unshared_tps_ratio']:.2f})")
 if r < 1.0:
     print("FAIL: paged plane slower than batched dense plane")
+    sys.exit(1)
+PY
+
+echo "== trie gate (BENCH_9.json) =="
+python - <<'PY'
+import json
+import sys
+
+d = json.load(open("BENCH_9.json"))
+r = d["trie_vs_exact_shared_tokens_ratio"]
+print(f"trie/exact shared-tokens ratio: {r:.2f}  "
+      f"(tok/s ratio: {d['trie_vs_exact_tps_ratio']:.2f})")
+if r <= 1.0:
+    print("FAIL: radix trie attaches no more than exact-match lookup")
     sys.exit(1)
 PY

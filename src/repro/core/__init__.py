@@ -22,7 +22,9 @@ from repro.core.kvcache import (  # noqa: F401
     OutOfPagesError,
     PagedAllocator,
     PrefixCache,
+    RadixPrefixRegistry,
     attach_prefix_run,
+    chain_keys,
 )
 from repro.core.policies import (  # noqa: F401
     BeladyOraclePolicy,

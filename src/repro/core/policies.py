@@ -37,7 +37,8 @@ ranks them:
 from __future__ import annotations
 
 import bisect
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 from repro.core.request import Phase, Request
 
@@ -96,14 +97,24 @@ def select_victim(policy: str, candidates: Sequence[Request]
 
 
 class ReplacementPolicy:
-    """Eviction ranking over cached-prefix registry entries.
+    """Eviction ranking over cached-prefix registry entries — since the
+    radix-trie registry (PR 9), one entry per TRIE NODE, keyed by the
+    node's first chain key and scored with the node's END-depth
+    ``n_kvs``.
 
-    The ``PrefixCache`` feeds every insert/hit/remove through the policy;
-    ``eviction_order(now)`` returns ALL tracked keys, most-evictable
-    first.  Drivers walk that order and skip entries whose page a live
-    block table still maps (evicting those frees nothing).  Higher
-    :meth:`rank` = evict earlier; ties break on insertion order, then
-    key, so the order is fully deterministic.
+    The ``RadixPrefixRegistry`` feeds every insert/hit/remove through
+    the policy, plus :meth:`record_resize` when a node's run grows
+    (incremental registration, merges) or shrinks (tail eviction,
+    splits) without being touched by a request — depth changes must
+    reprice Eq. 5 without counterfeiting recency.  ``eviction_order``
+    returns ALL tracked keys, most-evictable first; with ``leaf_of``
+    given, current leaves sort before interior nodes (an interior
+    eviction would strand live descendants — the registry's sweep
+    re-walks as leaves fall, so parents surface in a later pass).
+    Drivers skip entries whose pages a live block table still maps
+    (evicting those frees nothing).  Higher :meth:`rank` = evict
+    earlier; ties break on insertion order, then key, so the order is
+    fully deterministic.
     """
 
     name = "base"
@@ -122,12 +133,23 @@ class ReplacementPolicy:
     def record_remove(self, key: int) -> None:
         self._seq.pop(key, None)
 
+    def record_resize(self, key: int, n_kvs: int) -> None:
+        """A node's run changed length: update depth-derived state
+        WITHOUT refreshing recency (LRU and Belady carry none)."""
+        pass
+
     def rank(self, key: int, now: float) -> float:  # pragma: no cover
         raise NotImplementedError
 
-    def eviction_order(self, now: float) -> List[int]:
-        return sorted(self._seq,
+    def eviction_order(self, now: float,
+                       leaf_of: Optional[Callable[[int], bool]] = None
+                       ) -> List[int]:
+        keys = sorted(self._seq,
                       key=lambda k: (-self.rank(k, now), self._seq[k], k))
+        if leaf_of is None:
+            return keys
+        leaves = [k for k in keys if leaf_of(k)]
+        return leaves + [k for k in keys if not leaf_of(k)]
 
     def __len__(self) -> int:
         return len(self._seq)
@@ -194,6 +216,13 @@ class BreakEvenPolicy(ReplacementPolicy):
         n, _ = self._meta[key]
         self._meta[key] = (n, now)
 
+    def record_resize(self, key: int, n_kvs: int) -> None:
+        # node-depth-aware n_kvs: a tail eviction/split shrinks the
+        # node's end depth, a merge/extension grows it — reprice Eq. 5
+        # at the new depth but keep the observed last-hit time
+        _, last = self._meta[key]
+        self._meta[key] = (max(int(n_kvs), 1), last)
+
     def record_remove(self, key: int) -> None:
         super().record_remove(key)
         self._meta.pop(key, None)
@@ -249,13 +278,15 @@ def belady_future_from_requests(requests: Iterable[Request],
                                 page_size: int
                                 ) -> Dict[int, List[float]]:
     """Chain-key -> sorted arrival times over a known offline workload —
-    the oracle's future-access table (requests need real prompts)."""
-    from repro.core.kvcache import PrefixCache
+    the oracle's future-access table (requests need real prompts).
+    Trie nodes are keyed by their FIRST chain key, so per-page futures
+    index node entries directly (the oracle sees the node's head)."""
+    from repro.core.kvcache import chain_keys
 
     future: Dict[int, List[float]] = {}
     for r in requests:
         if r.prompt is None:
             continue
-        for key in PrefixCache.chain_keys(r.prompt, page_size):
+        for key in chain_keys(r.prompt, page_size):
             future.setdefault(key, []).append(r.arrival)
     return {k: sorted(v) for k, v in future.items()}

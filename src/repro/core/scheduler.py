@@ -79,6 +79,12 @@ class SchedulerConfig:
     # host-resident prefix promotes it back through the swap path,
     # charged ``cost_model.swap_time`` (virtual AND wall time).
     cache_demotion: bool = False
+    # Prefix-registry lookup mode (PR 9 radix trie):
+    #   trie  — radix longest-prefix walk; PARTIAL hits attach the
+    #           longest cached run even when the full prompt misses
+    #   exact — all-or-nothing device-only ablation (the pre-trie
+    #           chained-hash behaviour): any shortfall attaches nothing
+    prefix_lookup: str = "trie"
     # Deterministic fault injection (a ``serving.faults.FaultSpec``;
     # typed Any to keep core/ import-free of serving/).  Declared here
     # like page_size so the engine AND the simulator build their fault
@@ -404,6 +410,7 @@ def make_scheduler(name: str, M: int, *, S: int = 4096,
                    partial_preempt: bool = False,
                    cache_policy: str = "lru",
                    cache_demotion: bool = False,
+                   prefix_lookup: str = "trie",
                    cost_model: Optional["CostModel"] = None) -> Scheduler:
     name = name.lower()
     presets = {
@@ -431,5 +438,6 @@ def make_scheduler(name: str, M: int, *, S: int = 4096,
                           preempt_mode=preempt_mode, page_size=page_size,
                           partial_preempt=partial_preempt,
                           cache_policy=cache_policy,
-                          cache_demotion=cache_demotion, **kw)
+                          cache_demotion=cache_demotion,
+                          prefix_lookup=prefix_lookup, **kw)
     return Scheduler(cfg, cost_model=cost_model)

@@ -35,7 +35,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import BatchSpec, CostModel
-from repro.core.kvcache import PagedAllocator, PrefixCache, attach_prefix_run
+from repro.core.kvcache import PagedAllocator, attach_prefix_run, chain_keys
 from repro.core.policies import make_replacement_policy
 from repro.core.request import Phase, Request
 from repro.core.scheduler import Batch, Scheduler, SchedulerConfig
@@ -284,6 +284,7 @@ class PrefixTierSim:
         self.pg = pg
         self.cm = cost_model
         self.demotion = bool(scfg.cache_demotion)
+        self.exact = getattr(scfg, "prefix_lookup", "trie") == "exact"
         self.page_nbytes = int(page_nbytes)
         self.store = KVSwapStore(capacity_bytes=host_bytes)
         self.alloc = PagedAllocator(
@@ -303,7 +304,7 @@ class PrefixTierSim:
         self.stats: Dict[str, float] = dict(
             promotions=0, demotions=0, demote_drops=0,
             kv_promoted=0, kv_demoted=0, tier_swap_s=0.0,
-            prefix_integrity=0)
+            prefix_integrity=0, trie_hits=0, partial_hit_tokens=0)
         self._keys: Dict[int, List[int]] = {}
         self._ptoks: Dict[int, List[Tuple[int, ...]]] = {}
 
@@ -365,7 +366,7 @@ class PrefixTierSim:
             if r.prompt is None:
                 raise ValueError(
                     f"prefix-tier shadow needs real prompts (rid {r.rid})")
-            keys = PrefixCache.chain_keys(r.prompt, self.pg)
+            keys = chain_keys(r.prompt, self.pg)
             self._keys[r.rid] = keys
             self._ptoks[r.rid] = [
                 tuple(r.prompt[i * self.pg:(i + 1) * self.pg])
@@ -413,11 +414,19 @@ class PrefixTierSim:
         attached, promoted = attach_prefix_run(
             self.alloc, r.rid, keys[:cap], ptoks[:cap],
             host_tier=self.store if self.demotion else None, restore=None,
-            verify=self._verify if self.demotion else None)
+            verify=self._verify if self.demotion else None,
+            exact=self.exact)
         if promoted:
             self.pending_s += self.cm.swap_time(promoted)
             self.stats["promotions"] += promoted // self.pg
             self.stats["kv_promoted"] += promoted
+        if attached:
+            # mirror of the engine's trie counters (swap_stats):
+            # every non-empty attach is a trie hit; anything short of
+            # the full capped chain is a PARTIAL hit (PR 9)
+            self.stats["trie_hits"] += 1
+            if attached < cap * self.pg:
+                self.stats["partial_hit_tokens"] += attached
         return attached
 
     def drain(self) -> float:

@@ -175,3 +175,61 @@ def zipf_shared_prefix(n: int = 48, *, num_groups: int = 6,
                            arrival=i * arrival_gap,
                            prompt=prefixes[g] + suffix))
     return out
+
+
+def conversation_tree(n: int = 24, *, page_size: int = 8,
+                      system_pages: int = 3, turn_pages: int = 1,
+                      branching: int = 2, depth: int = 2,
+                      output_len: int = 4, vocab: int = 1000,
+                      arrival_gap: float = 5e-4,
+                      seed: int = 0) -> List[Request]:
+    """Branching multi-turn conversations — the radix-trie workload.
+
+    One shared system prompt (``system_pages`` full pages) roots a
+    ``branching``-ary tree of conversation turns, each turn a run of
+    ``turn_pages`` full pages; every request walks root -> leaf and
+    appends one UNIQUE final page (its own last user message), so no
+    two prompts are identical but every pair sharing a tree path shares
+    that path's token prefix.  This is exactly where an all-or-nothing
+    exact-match registry scores ZERO (the unique tail breaks every
+    full-prompt probe) while a radix trie converts each shared path
+    into a partial hit — the PR 9 exit-criterion workload.
+
+    Requests are dealt round-robin over the ``branching**depth`` leaves
+    (every leaf path occurs, hot paths first) and staggered
+    ``arrival_gap`` apart so reuse is cross-batch.  Prompt length is
+    uniform: ``(system_pages + depth*turn_pages + 1) * page_size``
+    tokens.  Always generates real token ids (engine mode)."""
+    assert page_size > 1 and system_pages >= 1 and turn_pages >= 1
+    assert branching >= 2 and depth >= 1
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, vocab, size=system_pages * page_size).tolist()
+    # turns[path] caches the token run for each tree node so siblings
+    # share ancestors verbatim (trie nodes must be byte-identical)
+    turns: dict = {}
+
+    def turn(path: Tuple[int, ...]) -> List[int]:
+        run = turns.get(path)
+        if run is None:
+            run = rng.integers(0, vocab,
+                               size=turn_pages * page_size).tolist()
+            turns[path] = run
+        return run
+
+    leaves = [()]
+    for _ in range(depth):
+        leaves = [p + (b,) for p in leaves for b in range(branching)]
+    order = list(range(len(leaves)))
+    rng.shuffle(order)
+    input_len = (system_pages + depth * turn_pages + 1) * page_size
+    out = []
+    for i in range(n):
+        path = leaves[order[i % len(leaves)]]
+        prompt = list(system)
+        for d in range(1, depth + 1):
+            prompt += turn(path[:d])
+        prompt += rng.integers(0, vocab, size=page_size).tolist()
+        out.append(Request(rid=i, input_len=input_len,
+                           output_len=output_len,
+                           arrival=i * arrival_gap, prompt=prompt))
+    return out

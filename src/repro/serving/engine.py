@@ -172,7 +172,7 @@ from repro.configs.base import ModelConfig
 from repro.core.cost_model import BatchSpec, CostModel
 from repro.core.invariants import invariant
 from repro.core.kvcache import (OutOfPagesError, PagedAllocator,
-                                PrefixCache, attach_prefix_run)
+                                attach_prefix_run, chain_keys)
 from repro.core.policies import make_replacement_policy
 from repro.core.request import Request
 from repro.core.scheduler import Scheduler
@@ -220,6 +220,14 @@ class EngineConfig:
     prefix_sharing: bool = True   # paged plane: map identical full
     #                               prompt pages to the same physical
     #                               pages via the refcounted registry
+    prefix_lookup: Optional[str] = None  # "trie" (radix-trie longest-
+    #                               prefix match, partial hits) |
+    #                               "exact" (all-or-nothing ablation:
+    #                               attach only when EVERY queried page
+    #                               resolves on device).  None keeps the
+    #                               SchedulerConfig's choice; set, it is
+    #                               written through (like page_size) so
+    #                               the simulator shadow matches
     # --- page-pool cache replacement (§6 five-minute rule) ------------- #
     cache_policy: Optional[str] = None   # "lru" | "break_even" — None
     #                               keeps the SchedulerConfig's choice;
@@ -462,8 +470,13 @@ class Engine:
             scheduler.cfg.cache_policy = ecfg.cache_policy
         if ecfg.cache_demotion is not None:
             scheduler.cfg.cache_demotion = ecfg.cache_demotion
+        if ecfg.prefix_lookup is not None:
+            scheduler.cfg.prefix_lookup = ecfg.prefix_lookup
         if ecfg.faults is not None:
             scheduler.cfg.faults = ecfg.faults
+        if scheduler.cfg.prefix_lookup not in ("trie", "exact"):
+            raise ValueError(
+                f"unknown prefix_lookup {scheduler.cfg.prefix_lookup!r}")
         # pooled paged data plane: only unbounded dense-attention
         # families are pooled; bounded-state families keep slots
         self._pooled = ecfg.plane == "paged" and paged_supported(cfg)
@@ -570,7 +583,12 @@ class Engine:
             # is snapshotted), so an aborted attempt's draws roll back
             # and its retry does not double-count them
             permanent_store_failures=0, transient_retries=0,
-            backoff_s=0.0, prefix_integrity=0)
+            backoff_s=0.0, prefix_integrity=0,
+            # radix-trie attach outcomes (PR 9): attaches that reused
+            # at least one page, and the tokens reused by attaches that
+            # matched only PART of the queried chain — the reuse the
+            # exact-match registry could never see
+            trie_hits=0, partial_hit_tokens=0)
         # virtual-time owed by prefix-tier traffic (demotions fire inside
         # allocator reclaims; promotions inside the prefix attach) —
         # folded into the CURRENT batch's swap_s before its dt is priced
@@ -1204,7 +1222,7 @@ class Engine:
     def _page_keys(self, r: Request) -> List[int]:
         keys = self._page_keys_of.get(r.rid)
         if keys is None:
-            keys = PrefixCache.chain_keys(r.prompt, self.ecfg.page_size)
+            keys = chain_keys(r.prompt, self.ecfg.page_size)
             self._page_keys_of[r.rid] = keys
         return keys
 
@@ -1299,15 +1317,18 @@ class Engine:
         self.swap_stats["wall_promote_s"] += time.perf_counter() - t0
 
     def _attach_prefix(self, r: Request, c: int) -> int:
-        """At a fresh claim, map cached pages matching the prompt's
-        leading full pages into r's block table and return the number of
-        tokens whose prefill compute is SKIPPED.  Each chain key resolves
-        against the DEVICE registry first, then (with demotion enabled)
-        against the host tier — a host hit promotes the page back through
-        the swap path, charged ``swap_time`` into this batch's virtual
-        time exactly like a §5.4 swap-in.  Control-plane accounting is
-        untouched (each sharer is charged its full page-rounded occupancy
-        — sharing only ever reduces physical use), so admitted schedules
+        """At a fresh claim, map the LONGEST cached run matching the
+        prompt's leading full pages into r's block table (radix-trie
+        walk — partial hits included) and return the number of tokens
+        whose prefill compute is SKIPPED.  The trie resolves the run on
+        the device first, then (with demotion enabled) extends it
+        against the host tier — a host hit promotes the page back
+        through the swap path, charged ``swap_time`` into this batch's
+        virtual time exactly like a §5.4 swap-in.  Under
+        ``prefix_lookup="exact"`` the attach is all-or-nothing (the
+        pre-trie ablation).  Control-plane accounting is untouched
+        (each sharer is charged its full page-rounded occupancy —
+        sharing only ever reduces physical use), so admitted schedules
         stay allocator-feasible.  At least one granted token is always
         computed (the emitting batch needs real logits), and only pages
         wholly inside this grant qualify."""
@@ -1320,11 +1341,16 @@ class Engine:
             self._page_tokens(r, cap),
             host_tier=self.swap_store if self._demotion else None,
             restore=self._promote_restore,
-            verify=self._verify_prefix if self._demotion else None)
+            verify=self._verify_prefix if self._demotion else None,
+            exact=self.sched.cfg.prefix_lookup == "exact")
         if promoted:
             self._tier_swap_s += self._swap_time(promoted)
             self.swap_stats["promotions"] += promoted // pg
             self.swap_stats["kv_promoted"] += promoted
+        if attached:
+            self.swap_stats["trie_hits"] += 1
+            if attached < cap * pg:
+                self.swap_stats["partial_hit_tokens"] += attached
         return attached
 
     def _register_prefix(self, r: Request, m_new: int) -> None:

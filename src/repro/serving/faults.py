@@ -22,6 +22,14 @@ sees.
 Hashing is ``zlib.crc32`` over ``repr`` of the key tuple — stable
 across processes (unlike salted ``hash()``), cheap, and uniform enough
 for fault rates.
+
+Prefix demotions interact with the radix trie (PR 9) page-by-page: an
+evicted node run lands in the host tier as consecutive
+``PrefixPageEntry`` snapshots, each CRC-sealed and each drawing its
+own ``corrupt_prefix`` / ``promote_fail`` verdict under its chain key.
+A failed verdict mid-run therefore truncates the promotion exactly
+where the rot is — the surviving front still attaches (the trie's
+partial-hit path) and only the tail recomputes.
 """
 from __future__ import annotations
 

@@ -81,7 +81,15 @@ def restore_state(obj: Any, snap: Dict[str, Any]) -> None:
 
 def snapshot_allocator(alloc: PagedAllocator) -> Callable[[], None]:
     """Capture the allocator (tables, free list, refcounts, pins,
-    virtual clock, stats) *and* its prefix registry + policy."""
+    virtual clock, stats) *and* its radix-trie prefix registry +
+    replacement policy.
+
+    The trie is a snapshot participant in its own right
+    (``RadixPrefixRegistry.snapshot_state``): a rolled-back step undoes
+    node inserts, splits, merges, and tail evictions structurally.
+    Node REFCOUNTS need no capture — they are derived from the
+    allocator's page refcounts, which this snapshot already restores,
+    so structure and leases can never roll back out of sync."""
     free = list(alloc._free)
     tables = {rid: BlockTable(list(t.pages), t.num_tokens)
               for rid, t in alloc._tables.items()}
@@ -91,7 +99,7 @@ def snapshot_allocator(alloc: PagedAllocator) -> Callable[[], None]:
     dirty = set(alloc.dirty)
     stats = dict(alloc.stats)
     pc = alloc.prefix_cache
-    pc_map = pc._map.copy()
+    pc_state = pc.snapshot_state()
     policy_state = copy_state(pc.policy)
 
     def restore() -> None:
@@ -103,7 +111,7 @@ def snapshot_allocator(alloc: PagedAllocator) -> Callable[[], None]:
         alloc.now, alloc.version = now, version
         alloc.dirty = set(dirty)
         alloc.stats = dict(stats)
-        pc._map = pc_map.copy()
+        pc.restore_state(pc_state)
         restore_state(pc.policy, {k: _copy_val(v)
                                   for k, v in policy_state.items()})
     return restore

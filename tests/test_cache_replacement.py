@@ -122,7 +122,9 @@ def test_reclaim_never_burns_entry_without_freeing():
         a.allocate(2, 6)                # needs 3 pages
     assert len(a.prefix_cache) == 4     # nothing burned
     assert a.stats["reclaimed"] == 0
-    assert a.stats["reclaim_skipped"] >= 4
+    # one skip per blocked NODE per sweep — the four pages form a
+    # single trie node whose (blocked) tail ends the node's sweep
+    assert a.stats["reclaim_skipped"] >= 1
     assert a.lookup_prefix(keys) == pages   # hits still served
     a.check_invariants()
     # once the sharer lets go the pages become pinned-only and reclaim

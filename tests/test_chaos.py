@@ -21,7 +21,7 @@ from repro.configs import get_config
 from repro.core import (PagedAllocator, Request, TheoreticalCostModel,
                         PrefixTierSim, get_hardware, make_scheduler,
                         simulate)
-from repro.data.workloads import zipf_shared_prefix
+from repro.data.workloads import conversation_tree, zipf_shared_prefix
 from repro.models import model as M
 from repro.serving import Engine, EngineConfig, KVSwapStore
 from repro.serving.faults import FaultPlan, FaultSpec
@@ -99,6 +99,12 @@ PAGED_CONFIGS = {
     "demotion": dict(scheduler="vllm", M_kv=256, S=512,
                      preempt_mode="recompute", demotion=True,
                      policy="break_even"),
+    # the PR 9 radix-trie participant: branching conversations whose
+    # partial-prefix attaches, node demotions, and txn rollbacks must
+    # all survive the fault schedule
+    "trie": dict(scheduler="vllm", M_kv=256, S=512,
+                 preempt_mode="recompute", demotion=True,
+                 policy="break_even"),
 }
 
 
@@ -106,6 +112,8 @@ def paged_workload(cfg, name):
     if name == "demotion":
         return zipf_shared_prefix(n=16, num_groups=6, page_size=8,
                                   seed=1, vocab=cfg.vocab_size)
+    if name == "trie":
+        return conversation_tree(n=12, page_size=8, vocab=cfg.vocab_size)
     if name == "partial":
         rs = np.random.RandomState(2)
         out = []
@@ -351,7 +359,7 @@ def _chaos_slot(mode, seed):
 def _chaos_paged(name, seed):
     cfg, _, ref = build_paged(**PAGED_CONFIGS[name])
     res_ref = ref.run(paged_workload(cfg, name))
-    if name != "demotion":
+    if name not in ("demotion", "trie"):
         assert res_ref.metrics.num_preemptions > 0
     cfg, _, eng = build_paged(faults=FaultSpec(seed=seed, **MIXED),
                               **PAGED_CONFIGS[name])

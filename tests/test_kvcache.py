@@ -137,7 +137,7 @@ def test_shared_prefix_attach_then_reclaim_keeps_sharer_data():
     SKIPPED: evicting it frees no memory, so destroying the registry
     entry would only burn the cache (the pre-fix behaviour).  Only
     pinned-ONLY pages return capacity — and their entries are the only
-    ones evicted."""
+    ones evicted (under the trie, tail pages first)."""
     a = PagedAllocator(num_pages=4, page_size=2)
     keys = PrefixCache.chain_keys([5, 6, 7, 8], 2)
     a.allocate(0, 4)
@@ -146,13 +146,20 @@ def test_shared_prefix_attach_then_reclaim_keeps_sharer_data():
     pages = a.lookup_prefix(keys)
     a.share(1, pages[:1], 2)               # rid 1 maps only the first
     a.allocate(2, 6)                       # 3 pages: reclaim pressure
-    # the still-mapped entry SURVIVES (skipped); only the pinned-only
-    # page was evicted, and only that one counted as reclaimed
+    # the still-mapped entry SURVIVES; only the pinned-only tail page
+    # was evicted, and only that one counted as reclaimed
     assert len(a.prefix_cache) == 1
     assert a.prefix_cache.get(keys[0]) == pages[0]
     assert a.stats["reclaimed"] == 1
-    assert a.stats["reclaim_skipped"] >= 1
+    assert a.stats["reclaim_skipped"] == 0  # tail-first never reached it
     assert a.table(1).pages == pages[:1]   # sharer keeps its page
+    a.check_invariants()
+    # further pressure lands ON the mapped page: it is skipped, counted,
+    # and the request correctly bounces — the sharer's data survives
+    with pytest.raises(OutOfPagesError):
+        a.allocate(9, 2)
+    assert a.stats["reclaim_skipped"] >= 1
+    assert a.prefix_cache.get(keys[0]) == pages[0]
     a.check_invariants()
     # and the shared page only frees once the sharer lets go — then it
     # still serves registry hits until genuinely reclaimed

@@ -1,0 +1,290 @@
+"""Radix-trie prefix registry (PR 9) — trie structure, stable digests,
+node-level eviction, txn rollback, and engine-vs-sim parity on the
+branching-conversation workload."""
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.kvcache import (OutOfPagesError, PagedAllocator,
+                                RadixPrefixRegistry, attach_prefix_run,
+                                chain_keys)
+from repro.core.policies import LRUPolicy
+
+
+# --------------------------------------------------------------------- #
+# stable content digests (satellite 1)
+# --------------------------------------------------------------------- #
+
+def test_chain_keys_stable_across_processes():
+    """Chain keys are blake2b content digests — identical across
+    processes and across PYTHONHASHSEED values (builtin ``hash`` is
+    salted per process and would shred any persisted/compared chain)."""
+    tokens = [3, 1, 4, 1, 5, 9, 2, 6]
+    here = chain_keys(tokens, 4)
+    prog = ("import sys; sys.path.insert(0, 'src'); "
+            "from repro.core.kvcache import chain_keys; "
+            f"print(chain_keys({tokens!r}, 4))")
+    for seed in ("0", "12345"):
+        out = subprocess.run(
+            [sys.executable, "-c", prog], capture_output=True, text=True,
+            cwd="/root/repo", env={"PYTHONHASHSEED": seed, "PATH": "/usr/bin:/bin"},
+            check=True).stdout.strip()
+        assert out == str(here), f"PYTHONHASHSEED={seed} changed the chain"
+    # chained: a different FIRST page changes every downstream key
+    other = chain_keys([9, 9, 9, 9] + tokens[4:], 4)
+    assert here[0] != other[0] and here[1] != other[1]
+
+
+def _tree():
+    """A tiny trie: one 3-page chain registered page-by-page (extends
+    into a single node), plus helpers to express prompts as chains."""
+    reg = RadixPrefixRegistry(LRUPolicy())
+    toks = [1, 2, 3, 4, 5, 6]
+    keys = chain_keys(toks, 2)
+    prev = None
+    for i, k in enumerate(keys):
+        reg.insert(k, page=10 + i, tokens=toks[2 * i:2 * i + 2],
+                   n_kvs=(i + 1) * 2, prev_key=prev)
+        prev = k
+    return reg, toks, keys
+
+
+def test_incremental_insert_extends_one_node():
+    reg, _, keys = _tree()
+    assert len(reg) == 3 and reg.num_nodes == 1
+    node = reg.node(keys[0])
+    assert node is not None and node.keys == keys
+    reg.check_invariants()
+
+
+def test_longest_prefix_partial_hit_splits_node():
+    reg, toks, keys = _tree()
+    # a prompt sharing only the first 2 pages: partial hit, node split
+    probe_toks = toks[:4] + [7, 8]
+    probe = chain_keys(probe_toks, 2)
+    assert probe[:2] == keys[:2] and probe[2] != keys[2]
+    ptoks = [tuple(probe_toks[i:i + 2]) for i in range(0, 6, 2)]
+    pages = reg.lookup_run(probe, ptoks)
+    assert pages == [10, 11]                 # longest matching run
+    assert reg.num_splits == 1 and reg.num_nodes == 2
+    front, tail = reg.node(keys[0]), reg.node(keys[2])
+    assert front.keys == keys[:2] and tail.keys == keys[2:]
+    assert tail.parent is front
+    reg.check_invariants()
+    # a full-chain probe still resolves across the split boundary
+    full = [tuple(toks[i:i + 2]) for i in range(0, 6, 2)]
+    assert reg.lookup_run(keys, full) == [10, 11, 12]
+
+
+def test_eviction_merges_single_child_back():
+    reg, toks, keys = _tree()
+    # diverge after page 2 -> split; register the divergent branch
+    alt_toks = toks[:4] + [7, 8]
+    alt = chain_keys(alt_toks, 2)
+    reg.lookup_run(alt, [tuple(alt_toks[i:i + 2]) for i in range(0, 6, 2)])
+    reg.insert(alt[2], page=20, tokens=(7, 8), n_kvs=6, prev_key=alt[1])
+    assert reg.num_nodes == 3                # front + two tails
+    # evicting the divergent leaf leaves ONE child -> path compression
+    reg.evict_tail(reg.node(alt[2]))
+    assert reg.num_merges == 1 and reg.num_nodes == 1
+    merged = reg.node(keys[0])
+    assert merged.keys == keys and merged.pages == [10, 11, 12]
+    reg.check_invariants()
+
+
+def test_collision_degrades_to_miss_mid_run():
+    """Same chain keys, different claimed tokens (a forged 64-bit
+    collision): token re-verification stops the walk at the colliding
+    page — the run BEFORE it still attaches."""
+    reg, toks, keys = _tree()
+    lying = [tuple(toks[0:2]), (9, 9), tuple(toks[4:6])]
+    assert reg.lookup_run(keys, lying) == [10]
+    assert reg.get(keys[1], tokens=(9, 9)) is None
+    assert reg.get(keys[1], tokens=toks[2:4]) == 11
+    reg.check_invariants()
+
+
+def test_insert_duplicate_key_rejected():
+    reg, _, keys = _tree()
+    with pytest.raises(ValueError, match="already registered"):
+        reg.insert(keys[1], page=99, tokens=(1, 2), n_kvs=4)
+
+
+# --------------------------------------------------------------------- #
+# node refcounts + leaf/tail-first eviction (allocator level)
+# --------------------------------------------------------------------- #
+
+def _branching_alloc(num_pages=8, pg=2):
+    """Allocator whose registry holds a branching tree: shared 2-page
+    front, two 1-page tails."""
+    a = PagedAllocator(num_pages=num_pages, page_size=pg)
+    left = [1, 2, 3, 4, 5, 6]
+    right = [1, 2, 3, 4, 7, 8]
+    kl, kr = chain_keys(left, pg), chain_keys(right, pg)
+    a.allocate(0, 6)
+    a.register_prefix(0, kl, [left[i:i + pg] for i in range(0, 6, pg)])
+    a.free(0)
+    a.allocate(1, 6)
+    # front 2 pages hit the cached run; only the tail registers anew
+    pages = a.lookup_prefix(kr, [right[i:i + pg] for i in range(0, 6, pg)])
+    assert len(pages) == 2
+    a.free(1)
+    a.allocate(2, 6)
+    a.register_prefix(2, kr, [right[i:i + pg] for i in range(0, 6, pg)])
+    a.free(2)
+    return a, kl, kr
+
+
+def test_node_refs_derived_from_tables():
+    a, kl, kr = _branching_alloc()
+    reg = a.prefix_cache
+    front = reg.node(kl[0])
+    assert reg.node_refs(front) == 0         # pin-only
+    pages = a.lookup_prefix(kl)
+    a.share(5, pages[:1], 2)
+    assert reg.node_refs(front) == 1         # one table mapping
+    a.free(5)
+    assert reg.node_refs(front) == 0
+
+
+def test_leaf_first_tail_first_eviction_order():
+    """Pressure evicts LEAF tails before any interior page: an evicted
+    node never strands live descendants, and along each chain pages go
+    deepest-first (residency stays prefix-closed)."""
+    a, kl, kr = _branching_alloc(num_pages=8, pg=2)
+    evicted = []
+    a.on_evict = lambda key, page, tokens, n_kvs: evicted.append(key)
+    assert len(a.prefix_cache) == 4 and a.free_pages == 4
+    a.allocate(7, 12)                        # 6 pages: evicts 2 of 4
+    leaf_keys = {kl[2], kr[2]}
+    assert set(evicted) == leaf_keys         # both leaves, no interior
+    front = a.prefix_cache.node(kl[0])
+    assert front is not None and front.keys == kl[:2]
+    a.check_invariants()
+    a.free(7)
+    evicted.clear()
+    a.allocate(8, 16)                        # full pool: front goes too
+    assert evicted == [kl[1], kl[0]]         # tail-first along the chain
+    assert len(a.prefix_cache) == 0
+    a.check_invariants()
+
+
+def test_exact_mode_attach_is_all_or_nothing():
+    a, kl, kr = _branching_alloc()
+    toks = [(1, 2), (3, 4), (5, 6)]
+    # trie mode: a probe missing its last page still attaches the front
+    probe_toks = [(1, 2), (3, 4), (9, 9)]
+    probe = chain_keys([1, 2, 3, 4, 9, 9], 2)
+    att, prom = attach_prefix_run(a, 6, probe, probe_toks)
+    assert (att, prom) == (4, 0) and a.table(6).num_tokens == 4
+    a.free(6)
+    # exact mode: same partial probe attaches NOTHING...
+    att, prom = attach_prefix_run(a, 6, probe, probe_toks, exact=True)
+    assert (att, prom) == (0, 0) and not a.has(6)
+    # ...but a fully-resident chain still attaches whole
+    att, prom = attach_prefix_run(a, 6, kl, toks, exact=True)
+    assert (att, prom) == (6, 0) and a.table(6).num_tokens == 6
+    a.free(6)
+    a.check_invariants()
+
+
+# --------------------------------------------------------------------- #
+# txn rollback: the trie is a snapshot participant
+# --------------------------------------------------------------------- #
+
+def test_txn_rollback_restores_trie_structure():
+    from repro.serving.txn import snapshot_allocator
+
+    a, kl, kr = _branching_alloc()
+    reg = a.prefix_cache
+    before = reg.snapshot_state()
+    restore = snapshot_allocator(a)
+    # mutate through every structural path: split (partial probe),
+    # insert, tail eviction + merge
+    probe_toks = [(1, 2), (9, 9)]
+    probe = chain_keys([1, 2, 9, 9], 2)
+    reg.lookup_run(probe, probe_toks)        # diverges mid-front: split
+    assert reg.num_splits == 2 and reg.num_nodes == 4
+    a.allocate(3, 8)                         # absorbs the free pages
+    a.allocate(4, 4)                         # evicts both leaf tails
+    assert reg.num_merges >= 1
+    restore()
+    assert reg.snapshot_state() == before
+    a.check_invariants()
+    order_after = reg.eviction_order()
+    assert set(order_after) == {kl[0], kl[2], kr[2]}
+    # post-rollback the registry still serves and still evicts cleanly
+    assert a.lookup_prefix(kl) != []
+    a.allocate(5, 16)
+    assert len(reg) == 0
+    a.check_invariants()
+
+
+# --------------------------------------------------------------------- #
+# engine vs simulator parity on conversation_tree (satellite 3)
+# --------------------------------------------------------------------- #
+
+def _parity(spec):
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import (PrefixTierSim, TheoreticalCostModel,
+                            get_hardware, make_scheduler, simulate)
+    from repro.data.workloads import conversation_tree
+    from repro.models import model as M
+    from repro.serving import Engine, EngineConfig
+
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cm = TheoreticalCostModel(cfg, get_hardware("tpu_v5e"))
+
+    def workload():
+        return conversation_tree(n=12, page_size=8, vocab=cfg.vocab_size)
+
+    sched = make_scheduler("vllm", 256, S=512, replacement="srf",
+                           cache_policy="break_even", cache_demotion=True,
+                           cost_model=cm)
+    eng = Engine(cfg, params, sched,
+                 EngineConfig(nslots=4, cache_len=64, chunk=16,
+                              plane="paged", page_size=8,
+                              cache_policy="break_even",
+                              cache_demotion=True, faults=spec),
+                 cost_model=cm)
+    res = eng.run(workload())
+
+    sched2 = make_scheduler("vllm", 256, S=512, replacement="srf",
+                            page_size=8, cache_policy="break_even",
+                            cache_demotion=True)
+    sched2.cfg.max_running = 4
+    sched2.cfg.faults = spec
+    nbytes = 2 * cfg.num_layers * 8 * cfg.num_kv_heads * cfg.head_dim_ \
+        * jnp.dtype(cfg.dtype).itemsize
+    shadow = PrefixTierSim(sched2.cfg, cm, page_nbytes=nbytes)
+    sim = simulate(sched2, workload(), cm, prefix_sim=shadow)
+
+    assert res.swap_stats["trie_hits"] > 0
+    assert res.swap_stats["partial_hit_tokens"] > 0
+    for key in ("trie_hits", "partial_hit_tokens", "demotions",
+                "promotions", "demote_drops", "prefix_integrity"):
+        assert sim.prefix_stats[key] == res.swap_stats[key], key
+    for key in ("prefix_hits", "prefix_shared_tokens", "reclaimed"):
+        assert sim.prefix_stats[key] == eng.allocator.stats[key], key
+    assert sim.makespan == pytest.approx(res.metrics.makespan, rel=1e-9)
+    eng_swaps = [b.swap_s for b in res.metrics.batches]
+    sim_swaps = [b.swap_s for b in sim.batches]
+    assert eng_swaps == pytest.approx(sim_swaps, rel=1e-9)
+
+
+def test_sim_engine_parity_conversation_tree():
+    _parity(None)
+
+
+def test_sim_engine_parity_conversation_tree_under_faults():
+    from repro.serving.faults import FaultSpec
+    _parity(FaultSpec(seed=5, p_store_transient=0.3, p_corrupt=0.3,
+                      p_demote_fail=0.3, p_promote_fail=0.3))
