@@ -11,8 +11,8 @@ test:
 smoke:
 	PYTHONPATH=src python -m benchmarks.run --smoke
 
-# repo-specific static analysis (fails on non-baselined findings);
-# see src/repro/analysis/README.md
+# repo-specific static analysis (fails on non-baselined findings;
+# prints a per-rule finding summary); see src/repro/analysis/README.md
 analyze:
 	PYTHONPATH=src python -m repro.analysis src/
 

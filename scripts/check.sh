@@ -1,9 +1,11 @@
 #!/usr/bin/env sh
 # Single offline regression entry point (also: `make check`):
 #   1. static analysis — repo-specific checkers (recompile hazards,
-#      host syncs, charge audit, config mirroring); fails on any
-#      finding that is neither allow-annotated nor baselined
-#      (src/repro/analysis/README.md)
+#      host syncs, charge audit, config mirroring, and the v2
+#      state-safety rules: txn-coverage rollback completeness,
+#      stat-mirror engine<->sim parity, async-drain swap protocol);
+#      fails on any finding that is neither allow-annotated nor
+#      baselined (src/repro/analysis/README.md)
 #   2. pytest suite — FAST tier by default (skips tests marked `slow`,
 #      the heaviest cross-plane parity sweeps); set CHECK_FULL=1 to run
 #      the complete tier-1 suite (what `python -m pytest -x -q` runs)

@@ -60,14 +60,19 @@ def main(argv=None) -> int:
         findings.extend(audit_artifacts())
 
     blocking = [f for f in findings if f.blocking]
+    per_rule = {rule: sum(1 for f in findings if f.rule == rule)
+                for rule in ALL_RULES}
     if args.json:
         print(json.dumps({"findings": [f.to_dict() for f in findings],
-                          "blocking": len(blocking)}, indent=1))
+                          "blocking": len(blocking),
+                          "per_rule": per_rule}, indent=1))
     else:
         for f in findings:
             print(f.render())
         n_sup = sum(1 for f in findings if f.suppressed)
         n_base = sum(1 for f in findings if f.baselined)
+        print("-- per rule: " + ", ".join(
+            f"{rule}={n}" for rule, n in per_rule.items()))
         print(f"-- {len(findings)} findings: {len(blocking)} blocking, "
               f"{n_sup} allowed inline, {n_base} baselined")
     return 1 if blocking else 0

@@ -1,0 +1,320 @@
+"""Checker 7 — async swap-protocol discipline: starts register, reads
+drain, results drain everything, drains stay off the trace.
+
+The PR 2/8 double-buffered swap path overlaps D2H copies with compute:
+``copy_to_host_async`` starts a transfer whose host bytes only exist
+after a drain boundary (``_drain_swaps`` / ``_drain_runs`` /
+``_drain_demotes`` blocks on the copy, replaces device leaves with host
+arrays, CRC-seals).  Between start and drain the entry sits in an
+in-flight buffer (``_pending_swaps`` / ``_pending_runs`` /
+``_pending_demotes``).  Four protocol obligations, each one checkable
+against the local call graph:
+
+* **every start is registered** — a ``copy_to_host_async()`` call must
+  be paired, on a compatible control-flow path, with a store into a
+  ``self._pending_*`` buffer: in the same function, or (for payload
+  builders like ``_gather_pages_device`` that return the in-flight
+  buffers) at every call site.  An unregistered start is a transfer no
+  drain boundary will ever finalize — the entry's CRC seals over
+  device buffers and verification goes undefined.
+
+* **payload reads are dominated by a drain** — popping an entry out of
+  the swap store (``pop`` / ``pop_runs`` on a store-like receiver) and
+  consuming its PAYLOAD (``.cache`` / ``.kv``, or passing the entry
+  whole to a writer) requires a lexically-earlier, path-compatible
+  ``_drain_*`` call in the same function.  Metadata-only pops (the
+  rollback repairs read ``num_tokens`` to unwind counters) need no
+  drain and are not flagged.
+
+* **the final result drains the world** — the function constructing
+  ``EngineResult(...)`` must call a zero-argument ``_drain_swaps()``
+  first (the full drain cascades to demotes and runs); otherwise
+  still-in-flight entries leak device arrays into the returned stats.
+
+* **drains stay host-side** — a ``_drain_*`` call inside jit-reachable
+  code would bake a blocking ``device_get`` into a traced computation
+  (at best a constant-folded surprise, at worst a tracer error).
+
+All four share one rule (``async-drain``); messages distinguish the
+obligation.  Intentional exceptions carry
+``# repro: allow-async-drain(<why the protocol holds anyway>)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import (ModuleIndex, dotted_name, last_attr,
+                                    paths_compatible)
+from repro.analysis.findings import Finding
+
+RULE = "async-drain"
+
+SCOPES = ("serving/", "core/")
+
+#: payload-popping methods on store-like receivers
+POP_METHODS = {"pop", "pop_runs", "pop_prefix"}
+STORE_RECEIVERS = {"swap_store", "store", "host_tier"}
+#: attributes whose access means the entry's PAYLOAD is consumed
+PAYLOAD_ATTRS = {"cache", "kv"}
+
+
+def in_scope(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return any(s in norm for s in SCOPES)
+
+
+def check_module(mod: ModuleIndex) -> List[Finding]:
+    if not in_scope(mod.path):
+        return []
+    out: List[Finding] = []
+    out.extend(_check_start_registration(mod))
+    out.extend(_check_pop_drained(mod))
+    out.extend(_check_result_drained(mod))
+    out.extend(_check_drain_off_trace(mod))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# shared scanning helpers
+# --------------------------------------------------------------------- #
+
+def _own_body(fn_node: ast.AST):
+    work = list(ast.iter_child_nodes(fn_node))
+    while work:
+        node = work.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        yield node
+        work.extend(ast.iter_child_nodes(node))
+
+
+def _pending_stores(mod: ModuleIndex, fn_node: ast.AST) -> List[ast.AST]:
+    """Stores into ``self._pending_*[...]`` within a function body."""
+    out = []
+    for node in _own_body(fn_node):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) \
+                        and last_attr(dotted_name(t.value)) \
+                        .startswith("_pending"):
+                    out.append(node)
+    return out
+
+
+def _drain_calls(mod: ModuleIndex, fn_node: ast.AST) -> List[ast.Call]:
+    out = []
+    for node in _own_body(fn_node):
+        if isinstance(node, ast.Call) and _is_drain_name(
+                last_attr(dotted_name(node.func))):
+            out.append(node)
+    return out
+
+
+def _is_drain_name(bare: str) -> bool:
+    return bare.startswith("_drain") or bare == "drain"
+
+
+def _call_sites(mod: ModuleIndex, callee: str) -> List[Tuple[str, ast.Call]]:
+    """(caller qualname, call node) pairs for calls to ``callee``."""
+    sites = []
+    for qual, info in sorted(mod.functions.items()):
+        if last_attr(callee) not in {last_attr(c) for c in info.calls}:
+            continue
+        for node in _own_body(info.node):
+            if isinstance(node, ast.Call) \
+                    and last_attr(dotted_name(node.func)) \
+                    == last_attr(callee):
+                sites.append((qual, node))
+    return sites
+
+
+# --------------------------------------------------------------------- #
+# 1. every copy_to_host_async start lands in a pending buffer
+# --------------------------------------------------------------------- #
+
+def _check_start_registration(mod: ModuleIndex) -> List[Finding]:
+    out: List[Finding] = []
+    flagged_fns: Set[str] = set()
+    for qual, info in sorted(mod.functions.items()):
+        starts = [node for node in _own_body(info.node)
+                  if isinstance(node, ast.Call)
+                  and last_attr(dotted_name(node.func))
+                  == "copy_to_host_async"]
+        if not starts:
+            continue
+        stores = _pending_stores(mod, info.node)
+        for start in starts:
+            spath = mod.branch_path(start)
+            if any(paths_compatible(mod.branch_path(s), spath)
+                   for s in stores):
+                continue
+            # builder pattern: the CALLERS register the returned buffers
+            if qual not in flagged_fns:
+                flagged_fns.add(qual)
+                out.extend(_check_caller_registration(mod, qual, start))
+    return out
+
+
+def _check_caller_registration(mod: ModuleIndex, qual: str,
+                               start: ast.Call) -> List[Finding]:
+    bare = qual.rsplit(".", 1)[-1]
+    sites = [(c, n) for c, n in _call_sites(mod, bare) if c != qual]
+    if not sites:
+        return [Finding(
+            rule=RULE, path=mod.path, line=start.lineno,
+            col=start.col_offset + 1, symbol=qual,
+            message=f"copy_to_host_async started in {bare} is never "
+                    f"registered in a self._pending_* buffer (here or "
+                    f"at any call site) — no drain boundary will ever "
+                    f"finalize this transfer")]
+    out = []
+    for caller, node in sites:
+        cinfo = mod.functions.get(caller)
+        if cinfo is None:
+            continue
+        stores = _pending_stores(mod, cinfo.node)
+        npath = mod.branch_path(node)
+        if any(paths_compatible(mod.branch_path(s), npath)
+               for s in stores):
+            continue
+        out.append(Finding(
+            rule=RULE, path=mod.path, line=node.lineno,
+            col=node.col_offset + 1, symbol=caller,
+            message=f"{bare}() starts an async D2H copy but this call "
+                    f"site never registers the result in a "
+                    f"self._pending_* buffer on its control-flow path "
+                    f"— the transfer has no drain boundary"))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# 2. payload-consuming pops are dominated by a drain
+# --------------------------------------------------------------------- #
+
+def _check_pop_drained(mod: ModuleIndex) -> List[Finding]:
+    out: List[Finding] = []
+    for qual, info in sorted(mod.functions.items()):
+        drains = _drain_calls(mod, info.node)
+        for pop, consumer in _consumed_pops(mod, info.node):
+            ppath = mod.branch_path(pop)
+            if any(d.lineno < pop.lineno
+                   and paths_compatible(mod.branch_path(d), ppath)
+                   for d in drains):
+                continue
+            method = last_attr(dotted_name(pop.func))
+            out.append(Finding(
+                rule=RULE, path=mod.path, line=pop.lineno,
+                col=pop.col_offset + 1, symbol=qual,
+                message=f".{method}() hands out a swap entry whose "
+                        f"payload is consumed ({consumer}) with no "
+                        f"preceding _drain_* call on this path — an "
+                        f"in-flight entry still holds device buffers "
+                        f"here"))
+    return out
+
+
+def _consumed_pops(mod: ModuleIndex, fn_node: ast.AST
+                   ) -> List[Tuple[ast.Call, str]]:
+    """Pop calls whose result's payload is consumed in this function."""
+    body = list(_own_body(fn_node))
+    pops: List[Tuple[ast.Call, str]] = []
+    for node in body:
+        if not (isinstance(node, ast.Call)
+                and last_attr(dotted_name(node.func)) in POP_METHODS
+                and _receiver(node) in STORE_RECEIVERS):
+            continue
+        parent = mod.parent(node)
+        if isinstance(parent, ast.Assign) and len(parent.targets) == 1 \
+                and isinstance(parent.targets[0], ast.Name):
+            use = _payload_use(body, parent.targets[0].id, node.lineno)
+            if use:
+                pops.append((node, use))
+        elif isinstance(parent, ast.For) and parent.iter is node \
+                and isinstance(parent.target, ast.Name):
+            use = _payload_use(list(ast.walk(parent)),
+                               parent.target.id, node.lineno)
+            if use:
+                pops.append((node, use))
+    return pops
+
+
+def _payload_use(nodes: Iterable[ast.AST], binding: str,
+                 after_line: int) -> str:
+    """How (if at all) ``binding``'s payload is consumed: a ``.cache`` /
+    ``.kv`` access, or the entry passed whole as a call argument."""
+    for node in nodes:
+        if isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == binding \
+                and node.attr in PAYLOAD_ATTRS \
+                and node.lineno >= after_line:
+            return f".{node.attr} read"
+        if isinstance(node, ast.Call) and node.lineno >= after_line:
+            for a in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(a, ast.Name) and a.id == binding:
+                    callee = last_attr(dotted_name(node.func))
+                    return f"passed whole to {callee}()"
+    return ""
+
+
+def _receiver(call: ast.Call) -> str:
+    func = call.func
+    if isinstance(func, ast.Attribute):
+        return last_attr(dotted_name(func.value))
+    return ""
+
+
+# --------------------------------------------------------------------- #
+# 3. EngineResult construction happens on fully-drained state
+# --------------------------------------------------------------------- #
+
+def _check_result_drained(mod: ModuleIndex) -> List[Finding]:
+    out: List[Finding] = []
+    for qual, info in sorted(mod.functions.items()):
+        for node in _own_body(info.node):
+            if not (isinstance(node, ast.Call)
+                    and last_attr(dotted_name(node.func))
+                    == "EngineResult"):
+                continue
+            npath = mod.branch_path(node)
+            full = [d for d in _drain_calls(mod, info.node)
+                    if not d.args and not d.keywords
+                    and d.lineno < node.lineno
+                    and paths_compatible(mod.branch_path(d), npath)]
+            if full:
+                continue
+            out.append(Finding(
+                rule=RULE, path=mod.path, line=node.lineno,
+                col=node.col_offset + 1, symbol=qual,
+                message="EngineResult is built with no preceding "
+                        "zero-argument _drain_swaps() on this path — "
+                        "in-flight swap/demote/run transfers would "
+                        "leak device buffers into the returned stats"))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# 4. drains never run under a jit trace
+# --------------------------------------------------------------------- #
+
+def _check_drain_off_trace(mod: ModuleIndex) -> List[Finding]:
+    reach = mod.jit_reachable()
+    if not reach:
+        return []
+    out: List[Finding] = []
+    for qual in sorted(reach):
+        info = mod.functions.get(qual)
+        if info is None:
+            continue
+        for node in _own_body(info.node):
+            if isinstance(node, ast.Call) and _is_drain_name(
+                    last_attr(dotted_name(node.func))):
+                out.append(Finding(
+                    rule=RULE, path=mod.path, line=node.lineno,
+                    col=node.col_offset + 1, symbol=qual,
+                    message=f"drain call inside jit-reachable code "
+                            f"({qual}) — the blocking device_get would "
+                            f"be traced into the compiled computation"))
+    return out

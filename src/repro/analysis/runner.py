@@ -5,7 +5,8 @@ from __future__ import annotations
 import os
 from typing import Iterable, List, Optional
 
-from repro.analysis import asserts, charges, hostsync, recompile
+from repro.analysis import (asserts, asyncdrain, charges, hostsync,
+                            recompile, statmirror, txncov)
 from repro.analysis.astutil import ModuleIndex
 from repro.analysis.findings import (Finding, apply_baseline,
                                      apply_suppressions, load_baseline,
@@ -19,11 +20,14 @@ ALL_RULES = (
     hostsync.RULE,
     charges.RULE, charges.RULE_MIRROR,
     asserts.RULE,
+    txncov.RULE, statmirror.RULE, asyncdrain.RULE,
     "bad-suppression",
 )
 
 _CHECKERS = (recompile.check_module, hostsync.check_module,
-             charges.check_module, asserts.check_module)
+             charges.check_module, asserts.check_module,
+             txncov.check_module, statmirror.check_module,
+             asyncdrain.check_module)
 
 
 def iter_py_files(paths: Iterable[str]) -> List[str]:

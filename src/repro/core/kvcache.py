@@ -83,6 +83,7 @@ from typing import (Any, Callable, Dict, Iterator, List, Optional,
 
 from repro.core.invariants import invariant
 from repro.core.policies import LRUPolicy, ReplacementPolicy
+from repro.core import stat_keys as SK
 
 
 class OutOfPagesError(RuntimeError):
@@ -525,9 +526,9 @@ class PagedAllocator:
         # are taken — a seeded FaultPlan raises a transient FaultError
         # here to model device allocation failures (serving.faults)
         self.fault_hook: Optional[Callable[[int], None]] = None
-        self.stats: Dict[str, int] = dict(
-            prefix_hits=0, prefix_shared_tokens=0, cow_copies=0,
-            reclaimed=0, reclaim_skipped=0)
+        self.stats: Dict[str, int] = {
+            SK.PREFIX_HITS: 0, SK.PREFIX_SHARED_TOKENS: 0,
+            SK.COW_COPIES: 0, SK.RECLAIMED: 0, SK.RECLAIM_SKIPPED: 0}
 
     # ------------------------------------------------------------------ #
     @property
@@ -622,10 +623,10 @@ class PagedAllocator:
                         if self.on_evict is not None:
                             self.on_evict(key, page, tokens, n_kvs)
                         self._decref(page)        # pin was the only ref
-                        self.stats["reclaimed"] += 1
+                        self.stats[SK.RECLAIMED] += 1
                         progress = True
                     if blocked:
-                        self.stats["reclaim_skipped"] += 1
+                        self.stats[SK.RECLAIM_SKIPPED] += 1
         if need > len(self._free):
             raise OutOfPagesError(
                 f"need {need} pages, {len(self._free)} free "
@@ -669,8 +670,8 @@ class PagedAllocator:
         self.version += 1
         self.dirty.add(rid)
         self._tables[rid] = BlockTable(list(pages), num_tokens)
-        self.stats["prefix_hits"] += 1
-        self.stats["prefix_shared_tokens"] += num_tokens
+        self.stats[SK.PREFIX_HITS] += 1
+        self.stats[SK.PREFIX_SHARED_TOKENS] += num_tokens
 
     def extend_shared(self, rid: int, page: int, num_tokens: int) -> None:
         """Append ONE live (registry-held) page to the tail of rid's
@@ -686,7 +687,7 @@ class PagedAllocator:
         self.dirty.add(rid)
         tbl.pages.append(page)
         tbl.num_tokens += num_tokens
-        self.stats["prefix_shared_tokens"] += num_tokens
+        self.stats[SK.PREFIX_SHARED_TOKENS] += num_tokens
 
     def ensure_private(self, rid: int,
                        page_index: int) -> Optional[Tuple[int, int]]:
@@ -704,7 +705,7 @@ class PagedAllocator:
         new = self._take(1)[0]
         tbl.pages[page_index] = new
         self._decref(page)
-        self.stats["cow_copies"] += 1
+        self.stats[SK.COW_COPIES] += 1
         return page, new
 
     def free(self, rid: int) -> int:

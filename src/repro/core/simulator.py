@@ -39,6 +39,7 @@ from repro.core.kvcache import PagedAllocator, attach_prefix_run, chain_keys
 from repro.core.policies import make_replacement_policy
 from repro.core.request import Phase, Request
 from repro.core.scheduler import Batch, Scheduler, SchedulerConfig
+from repro.core import stat_keys as SK
 
 
 @dataclass
@@ -163,10 +164,11 @@ class _FaultMirror:
     def __init__(self, plan):
         self.plan = plan
         self.runs: Dict[int, List[Tuple[int, bool]]] = {}
-        self.stats: Dict[str, float] = dict(
-            rollbacks=0, integrity_failures=0, degraded_recomputes=0,
-            permanent_store_failures=0, transient_retries=0,
-            backoff_s=0.0, swap_fallbacks=0)
+        self.stats: Dict[str, float] = {
+            SK.ROLLBACKS: 0, SK.INTEGRITY_FAILURES: 0,
+            SK.DEGRADED_RECOMPUTES: 0, SK.PERMANENT_STORE_FAILURES: 0,
+            SK.TRANSIENT_RETRIES: 0, SK.BACKOFF_S: 0.0,
+            SK.SWAP_FALLBACKS: 0}
 
     def snapshot(self):
         runs = {rid: list(rs) for rid, rs in self.runs.items()}
@@ -180,8 +182,8 @@ class _FaultMirror:
     def _transients(self, kind: str, fkey: Tuple) -> None:
         k = self.plan.transient_failures(kind, *fkey)
         if k:
-            self.stats["transient_retries"] += k
-            self.stats["backoff_s"] += sum(0.1 * 2 ** i for i in range(k))
+            self.stats[SK.TRANSIENT_RETRIES] += k
+            self.stats[SK.BACKOFF_S] += sum(0.1 * 2 ** i for i in range(k))
 
     def suspend(self, v: Request, sched: Scheduler) -> bool:
         """Mirror the full-suspend put (engine ``_swap_out`` /
@@ -190,14 +192,14 @@ class _FaultMirror:
         degrade to recompute, no charge)."""
         fkey = (v.rid, v.suspended_m, v.swaps)
         if self.plan.decide("perm_put", *fkey):
-            self.stats["permanent_store_failures"] += 1
+            self.stats[SK.PERMANENT_STORE_FAILURES] += 1
             for _ in self.runs.pop(v.rid, []):
                 v.swaps -= 1
                 sched.num_swaps -= 1
-                self.stats["swap_fallbacks"] += 1
+                self.stats[SK.SWAP_FALLBACKS] += 1
             v.drop_suspended()
             sched.num_swaps -= 1
-            self.stats["swap_fallbacks"] += 1
+            self.stats[SK.SWAP_FALLBACKS] += 1
             return False
         self._transients("store_put", fkey)
         corrupt = self.plan.decide("corrupt_put", *fkey)
@@ -210,14 +212,14 @@ class _FaultMirror:
         back to recompute (the tiling has a gap)."""
         fkey = (r.rid, r.m, n_tokens, r.partial_preemptions)
         if self.plan.decide("perm_run", *fkey):
-            self.stats["permanent_store_failures"] += 1
+            self.stats[SK.PERMANENT_STORE_FAILURES] += 1
             r.drop_tail_run(n_tokens)
             sched.num_swaps -= 1
-            self.stats["swap_fallbacks"] += 1
+            self.stats[SK.SWAP_FALLBACKS] += 1
             for n, _ in self.runs.pop(r.rid, []):
                 r.drop_tail_run(n)
                 sched.num_swaps -= 1
-                self.stats["swap_fallbacks"] += 1
+                self.stats[SK.SWAP_FALLBACKS] += 1
             return False
         self._transients("store_run", fkey)
         corrupt = self.plan.decide("corrupt_run", *fkey)
@@ -301,10 +303,11 @@ class PrefixTierSim:
             from repro.serving.faults import FaultPlan
             self.plan = FaultPlan(scfg.faults)
         self.pending_s = 0.0      # tier charges owed to the current batch
-        self.stats: Dict[str, float] = dict(
-            promotions=0, demotions=0, demote_drops=0,
-            kv_promoted=0, kv_demoted=0, tier_swap_s=0.0,
-            prefix_integrity=0, trie_hits=0, partial_hit_tokens=0)
+        self.stats: Dict[str, float] = {
+            SK.PROMOTIONS: 0, SK.DEMOTIONS: 0, SK.DEMOTE_DROPS: 0,
+            SK.KV_PROMOTED: 0, SK.KV_DEMOTED: 0, SK.TIER_SWAP_S: 0.0,
+            SK.PREFIX_INTEGRITY: 0, SK.TRIE_HITS: 0,
+            SK.PARTIAL_HIT_TOKENS: 0}
         self._keys: Dict[int, List[int]] = {}
         self._ptoks: Dict[int, List[Tuple[int, ...]]] = {}
 
@@ -335,17 +338,17 @@ class PrefixTierSim:
         if self.plan is not None and self.plan.decide("demote_fail", key):
             # mirror of the engine's dropped demotion: no entry, no
             # charge — the page recomputes on its next miss
-            self.stats["demote_drops"] += 1
+            self.stats[SK.DEMOTE_DROPS] += 1
             return
         try:
             self.store.put_prefix(key, tokens, n_kvs, None,
                                   nbytes=self.page_nbytes)
         except SwapStoreFullError:
-            self.stats["demote_drops"] += 1
+            self.stats[SK.DEMOTE_DROPS] += 1
             return
         self.pending_s += self.cm.swap_time(self.pg)
-        self.stats["demotions"] += 1
-        self.stats["kv_demoted"] += self.pg
+        self.stats[SK.DEMOTIONS] += 1
+        self.stats[SK.KV_DEMOTED] += self.pg
 
     def _verify(self, entry) -> bool:
         """Mirror of the engine's ``_verify_prefix`` promotion gate:
@@ -357,7 +360,7 @@ class PrefixTierSim:
             self.plan.decide("corrupt_prefix", entry.key)
             or self.plan.decide("promote_fail", entry.key))
         if bad:
-            self.stats["prefix_integrity"] += 1
+            self.stats[SK.PREFIX_INTEGRITY] += 1
         return not bad
 
     def _chain(self, r: Request):
@@ -418,21 +421,21 @@ class PrefixTierSim:
             exact=self.exact)
         if promoted:
             self.pending_s += self.cm.swap_time(promoted)
-            self.stats["promotions"] += promoted // self.pg
-            self.stats["kv_promoted"] += promoted
+            self.stats[SK.PROMOTIONS] += promoted // self.pg
+            self.stats[SK.KV_PROMOTED] += promoted
         if attached:
             # mirror of the engine's trie counters (swap_stats):
             # every non-empty attach is a trie hit; anything short of
             # the full capped chain is a PARTIAL hit (PR 9)
-            self.stats["trie_hits"] += 1
+            self.stats[SK.TRIE_HITS] += 1
             if attached < cap * self.pg:
-                self.stats["partial_hit_tokens"] += attached
+                self.stats[SK.PARTIAL_HIT_TOKENS] += attached
         return attached
 
     def drain(self) -> float:
         """Tier charges accrued for the batch being priced."""
         s, self.pending_s = self.pending_s, 0.0
-        self.stats["tier_swap_s"] += s
+        self.stats[SK.TIER_SWAP_S] += s
         return s
 
     def register(self, r: Request, m_new: int) -> None:
@@ -566,9 +569,9 @@ def simulate(scheduler: Scheduler, requests: Sequence[Request],
             if bad is not None:
                 txn.rollback()
                 now, carry_swap_s, carry_out, carry_preempted = saved
-                mirror.stats["rollbacks"] += 1
-                mirror.stats["integrity_failures"] += 1
-                mirror.stats["degraded_recomputes"] += 1
+                mirror.stats[SK.ROLLBACKS] += 1
+                mirror.stats[SK.INTEGRITY_FAILURES] += 1
+                mirror.stats[SK.DEGRADED_RECOMPUTES] += 1
                 mirror.repair(bad, scheduler)   # on rolled-back state
                 continue
         # swap-in charges for suspended requests re-admitted here, and

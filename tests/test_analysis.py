@@ -526,3 +526,398 @@ def test_baseline_file_shape():
         data = json.load(f)
     assert sorted(data) == ["fingerprints", "note"]
     assert data["fingerprints"] == sorted(set(data["fingerprints"]))
+
+
+# --------------------------------------------------------------------- #
+# checker 5: txn-coverage (PR 10)
+# --------------------------------------------------------------------- #
+
+SNAPSHOT_CLASS_HOLE = """
+    class ShadowThing:
+        def __init__(self):
+            self.runs = {}
+            self.epoch = 0
+
+        def snapshot(self):
+            runs = dict(self.runs)
+
+            def restore():
+                self.runs = dict(runs)
+            return restore
+
+        def advance(self):
+            self.epoch += 1
+            self.runs[1] = 2
+"""
+
+SNAPSHOT_CLASS_COMPLETE = """
+    class ShadowThing:
+        def __init__(self):
+            self.runs = {}
+            self.epoch = 0
+
+        def snapshot(self):
+            runs = dict(self.runs)
+            epoch = self.epoch
+
+            def restore():
+                self.runs = dict(runs)
+                self.epoch = epoch
+            return restore
+
+        def advance(self):
+            self.epoch += 1
+            self.runs[1] = 2
+"""
+
+# regression fixture: the live-code shape this PR annotated — engine
+# state mutated on a step-reachable path that the restore closure never
+# captures (the real recovery_stats/wall/_step_no sites carry allows)
+ENGINE_TXN_HOLE = """
+    class Engine:
+        def _begin_txn(self):
+            cache = self.cache
+
+            def restore():
+                self.cache = cache
+            return restore
+
+        def step(self):
+            txn = self._begin_txn()
+            self.cache = {}
+            self.wall += 1.0
+"""
+
+ENGINE_TXN_COMPLETE = """
+    class Engine:
+        def _begin_txn(self):
+            cache = self.cache
+            wall = self.wall
+
+            def restore():
+                self.cache = cache
+                self.wall = wall
+            return restore
+
+        def step(self):
+            txn = self._begin_txn()
+            self.cache = {}
+            self.wall += 1.0
+"""
+
+
+def test_txncov_snapshot_class_hole_flagged():
+    from repro.analysis import txncov
+    fs = _blocking(_run(txncov.check_module, SNAPSHOT_CLASS_HOLE),
+                   txncov.RULE)
+    assert len(fs) == 1 and "epoch" in fs[0].message
+
+
+def test_txncov_snapshot_class_complete_clean():
+    from repro.analysis import txncov
+    assert not _blocking(_run(txncov.check_module, SNAPSHOT_CLASS_COMPLETE))
+
+
+def test_txncov_engine_hole_flagged():
+    from repro.analysis import txncov
+    fs = _blocking(_run(txncov.check_module, ENGINE_TXN_HOLE), txncov.RULE)
+    assert len(fs) == 1 and "self.wall" in fs[0].message
+
+
+def test_txncov_engine_complete_clean():
+    from repro.analysis import txncov
+    assert not _blocking(_run(txncov.check_module, ENGINE_TXN_COMPLETE))
+
+
+def test_txncov_out_of_scope_clean():
+    from repro.analysis import txncov
+    fs = _run(txncov.check_module, SNAPSHOT_CLASS_HOLE,
+              path="src/repro/launch/tool.py")
+    assert _blocking(fs, txncov.RULE) == []
+
+
+def test_txncov_live_participants_clean():
+    """The real participant write-sets are fully captured by txn.py —
+    deleting one snapshot field is the seeded gate check."""
+    from repro.analysis import txncov
+    for rel in ("src/repro/core/kvcache.py", "src/repro/core/request.py",
+                "src/repro/core/scheduler.py",
+                "src/repro/serving/swap_store.py"):
+        with open(os.path.join(REPO_ROOT, rel)) as f:
+            mod = ModuleIndex(rel, f.read())
+        fs = [x for x in txncov.check_module(mod)]
+        assert fs == [], (rel, [x.render() for x in fs])
+
+
+def test_txncov_request_field_deletion_detected(tmp_path):
+    """Seeded mutation (a): dropping a field from _REQUEST_FIELDS makes
+    the Request write-set check fire exactly once."""
+    from repro.analysis import txncov
+    with open(os.path.join(REPO_ROOT, "src/repro/serving/txn.py")) as f:
+        txn_src = f.read().replace('"predicted_output",', "")
+    with open(os.path.join(REPO_ROOT, "src/repro/core/request.py")) as f:
+        req_src = f.read()
+    base = tmp_path / "src" / "repro"
+    (base / "serving").mkdir(parents=True)
+    (base / "core").mkdir()
+    (base / "serving" / "txn.py").write_text(txn_src)
+    req_path = base / "core" / "request.py"
+    req_path.write_text(req_src)
+    mod = ModuleIndex(str(req_path), req_src)
+    fs = _blocking(txncov.check_module(mod), txncov.RULE)
+    assert len(fs) == 1 and "predicted_output" in fs[0].message
+
+
+# --------------------------------------------------------------------- #
+# checker 6: stat-mirror (PR 10)
+# --------------------------------------------------------------------- #
+
+ENGINE_ONLY_STAT_KEY = """
+    class EngineResult:
+        pass
+
+    class Engine:
+        def _account(self):
+            self.swap_stats["bogus_counter_xyz"] = 1
+"""
+
+ENGINE_MIRRORED_STAT_KEYS = """
+    from repro.core import stat_keys as SK
+
+    class EngineResult:
+        pass
+
+    class Engine:
+        def _account(self):
+            self.swap_stats[SK.PROMOTIONS] += 1
+            self.swap_stats["wall_out_s"] += 0.5
+"""
+
+
+def test_statmirror_engine_only_key_flagged():
+    from repro.analysis import statmirror
+    fs = _blocking(_run(statmirror.check_module, ENGINE_ONLY_STAT_KEY),
+                   statmirror.RULE)
+    assert len(fs) == 1 and "bogus_counter_xyz" in fs[0].message
+
+
+def test_statmirror_mirrored_and_allowlisted_clean():
+    """A key the simulator mirror also writes, and a sanctioned
+    engine-wall key, both pass — constants resolve through
+    core/stat_keys.py."""
+    from repro.analysis import statmirror
+    assert not _blocking(_run(statmirror.check_module,
+                              ENGINE_MIRRORED_STAT_KEYS))
+
+
+def test_statmirror_live_engine_and_sim_clean():
+    from repro.analysis import statmirror
+    for rel in ("src/repro/serving/engine.py", "src/repro/core/simulator.py"):
+        with open(os.path.join(REPO_ROOT, rel)) as f:
+            mod = ModuleIndex(rel, f.read())
+        fs = _blocking(statmirror.check_module(mod), statmirror.RULE)
+        assert fs == [], (rel, [x.render() for x in fs])
+
+
+def test_statmirror_batchlog_asymmetry_flagged():
+    """An engine-side BatchLog field the simulator never emits (and the
+    allowlist does not sanction) is per-batch parity drift."""
+    from repro.analysis import statmirror
+    src = ENGINE_MIRRORED_STAT_KEYS + """
+    def log(self):
+        self.batch_logs.append(BatchLog(t_start=0.0, bogus_field=1))
+"""
+    fs = _blocking(_run(statmirror.check_module, src), statmirror.RULE)
+    assert len(fs) == 1 and "bogus_field" in fs[0].message
+
+
+# --------------------------------------------------------------------- #
+# checker 7: async-drain (PR 10)
+# --------------------------------------------------------------------- #
+
+UNDRAINED_POP = """
+    class Engine:
+        def _swap_in(self, r):
+            entry = self.swap_store.pop(r.rid)
+            self.cache = entry.cache
+"""
+
+DRAINED_POP = """
+    class Engine:
+        def _swap_in(self, r):
+            if r.rid in self._pending_swaps:
+                self._drain_swaps(rid=r.rid)
+            entry = self.swap_store.pop(r.rid)
+            self.cache = entry.cache
+"""
+
+METADATA_POP = """
+    class Engine:
+        def _repair(self, r):
+            for run in self.swap_store.pop_runs(r.rid):
+                r.drop_tail_run(run.num_tokens)
+"""
+
+UNREGISTERED_START = """
+    class Engine:
+        def _swap_out(self, snap):
+            snap.copy_to_host_async()
+"""
+
+REGISTERED_START = """
+    class Engine:
+        def _swap_out(self, rid, snap):
+            snap.copy_to_host_async()
+            self._pending_swaps[rid] = snap
+"""
+
+CALLER_REGISTERED_START = """
+    class Engine:
+        def _gather(self, kv):
+            kv.copy_to_host_async()
+            return kv
+
+        def _swap_out(self, rid, kv):
+            entry = self._gather(kv)
+            self._pending_runs[rid] = entry
+"""
+
+UNDRAINED_RESULT = """
+    class Engine:
+        def run(self):
+            return EngineResult(outputs={})
+"""
+
+DRAINED_RESULT = """
+    class Engine:
+        def run(self):
+            self._drain_swaps()
+            return EngineResult(outputs={})
+"""
+
+DRAIN_UNDER_JIT = """
+    import jax
+
+    @jax.jit
+    def kernel(x):
+        _drain_swaps()
+        return x
+"""
+
+
+def test_asyncdrain_undrained_pop_flagged():
+    from repro.analysis import asyncdrain
+    fs = _blocking(_run(asyncdrain.check_module, UNDRAINED_POP),
+                   asyncdrain.RULE)
+    assert len(fs) == 1 and ".cache read" in fs[0].message
+
+
+def test_asyncdrain_drained_pop_clean():
+    from repro.analysis import asyncdrain
+    assert not _blocking(_run(asyncdrain.check_module, DRAINED_POP))
+
+
+def test_asyncdrain_metadata_pop_clean():
+    """Rollback repairs read run metadata only — no drain required."""
+    from repro.analysis import asyncdrain
+    assert not _blocking(_run(asyncdrain.check_module, METADATA_POP))
+
+
+def test_asyncdrain_unregistered_start_flagged():
+    from repro.analysis import asyncdrain
+    fs = _blocking(_run(asyncdrain.check_module, UNREGISTERED_START),
+                   asyncdrain.RULE)
+    assert len(fs) == 1 and "never" in fs[0].message
+
+
+def test_asyncdrain_registered_start_clean():
+    from repro.analysis import asyncdrain
+    assert not _blocking(_run(asyncdrain.check_module, REGISTERED_START))
+
+
+def test_asyncdrain_caller_registered_start_clean():
+    """Builder pattern: the copy starts in a helper, every call site
+    registers the returned buffers (the _gather_pages_device shape)."""
+    from repro.analysis import asyncdrain
+    assert not _blocking(_run(asyncdrain.check_module,
+                              CALLER_REGISTERED_START))
+
+
+def test_asyncdrain_undrained_result_flagged():
+    from repro.analysis import asyncdrain
+    fs = _blocking(_run(asyncdrain.check_module, UNDRAINED_RESULT),
+                   asyncdrain.RULE)
+    assert len(fs) == 1 and "EngineResult" in fs[0].message
+
+
+def test_asyncdrain_drained_result_clean():
+    from repro.analysis import asyncdrain
+    assert not _blocking(_run(asyncdrain.check_module, DRAINED_RESULT))
+
+
+def test_asyncdrain_drain_under_jit_flagged():
+    from repro.analysis import asyncdrain
+    fs = _blocking(_run(asyncdrain.check_module, DRAIN_UNDER_JIT),
+                   asyncdrain.RULE)
+    assert len(fs) == 1 and "jit-reachable" in fs[0].message
+
+
+def test_asyncdrain_live_engine_clean():
+    from repro.analysis import asyncdrain
+    rel = "src/repro/serving/engine.py"
+    with open(os.path.join(REPO_ROOT, rel)) as f:
+        mod = ModuleIndex(rel, f.read())
+    fs = _blocking(asyncdrain.check_module(mod), asyncdrain.RULE)
+    assert fs == [], [x.render() for x in fs]
+
+
+# --------------------------------------------------------------------- #
+# CLI: --json schema, per-rule summary, --write-baseline determinism
+# --------------------------------------------------------------------- #
+
+def test_cli_json_schema(tmp_path, capsys):
+    """Downstream tooling consumes --json: top-level and per-finding
+    keys are stable across checkers."""
+    from repro.analysis.__main__ import main
+    from repro.analysis.runner import ALL_RULES
+    (tmp_path / "serving").mkdir()
+    bad = tmp_path / "serving" / "mod.py"
+    bad.write_text(textwrap.dedent(ENGINE_TXN_HOLE))
+    rc = main(["--json", "--no-baseline", str(bad)])
+    out = json.loads(capsys.readouterr().out)
+    assert sorted(out) == ["blocking", "findings", "per_rule"]
+    assert sorted(out["per_rule"]) == sorted(ALL_RULES)
+    assert out["blocking"] >= 1 and rc == 1
+    for f in out["findings"]:
+        assert sorted(f) == ["baselined", "col", "fingerprint", "line",
+                             "message", "path", "reason", "rule",
+                             "suppressed", "symbol"]
+
+
+def test_cli_per_rule_summary_line(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    clean = tmp_path / "mod.py"
+    clean.write_text("x = 1\n")
+    rc = main(["--no-baseline", str(clean)])
+    out = capsys.readouterr().out
+    assert rc == 0 and "-- per rule:" in out \
+        and "txn-coverage=0" in out
+
+
+def test_cli_write_baseline_deterministic(tmp_path, capsys):
+    """--write-baseline regenerates the grandfather file byte-for-byte
+    reproducibly: sorted unique fingerprints, stable note."""
+    from repro.analysis.__main__ import main
+    (tmp_path / "serving").mkdir()
+    bad = tmp_path / "serving" / "mod.py"
+    bad.write_text(textwrap.dedent(ENGINE_TXN_HOLE + UNDRAINED_POP))
+    b1, b2 = tmp_path / "b1.json", tmp_path / "b2.json"
+    assert main(["--write-baseline", "--baseline", str(b1), str(bad)]) == 0
+    assert main(["--write-baseline", "--baseline", str(b2), str(bad)]) == 0
+    capsys.readouterr()
+    assert b1.read_bytes() == b2.read_bytes()
+    data = json.loads(b1.read_text())
+    assert data["fingerprints"] == sorted(set(data["fingerprints"])) \
+        and len(data["fingerprints"]) >= 2
+    # the regenerated file silences the findings it records
+    assert main(["--baseline", str(b1), str(bad)]) == 0
